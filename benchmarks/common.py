@@ -1,0 +1,44 @@
+"""Benchmark harness utilities: timing + the ``name,us_per_call,derived``
+CSV contract used by benchmarks.run."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+ROWS: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def run_worker(module: str, *args, devices: int = 8, timeout: int = 1800
+               ) -> str:
+    """Run a benchmark worker in a subprocess with N forced host devices
+    (the main process must keep seeing 1 device)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-m", module, *map(str, args)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if out.returncode != 0:
+        raise RuntimeError(f"{module} failed:\n{out.stdout}\n{out.stderr}")
+    return out.stdout

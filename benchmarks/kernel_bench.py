@@ -1,0 +1,72 @@
+"""Pallas kernel validation + timing sweep (shapes x dtypes vs oracles)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ops, ref
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+
+    # flash attention: shape/dtype/mode sweep
+    for (B, S, H, Hkv, D, mode, w, dt) in [
+            (2, 256, 4, 2, 64, "causal", 0, jnp.float32),
+            (1, 512, 8, 2, 128, "causal", 0, jnp.bfloat16),
+            (1, 256, 4, 4, 64, "swa", 64, jnp.float32),
+            (2, 128, 2, 2, 64, "bidirectional", 0, jnp.float32)]:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, S, H, D), dt)
+        k = jax.random.normal(ks[1], (B, S, Hkv, D), dt)
+        v = jax.random.normal(ks[2], (B, S, Hkv, D), dt)
+        o = ops.flash_attention(q, k, v, mode=mode, window=w, bq=64, bk=64)
+        r = ref.attention_ref(q, k, v, mode=mode, window=w)
+        err = float(jnp.max(jnp.abs(o.astype(jnp.float32)
+                                    - r.astype(jnp.float32))))
+        us = timeit(lambda: jax.block_until_ready(
+            ops.flash_attention(q, k, v, mode=mode, window=w, bq=64, bk=64)))
+        emit(f"kernel.flash.{mode}.{S}x{H}x{D}.{jnp.dtype(dt).name}", us,
+             f"max_err={err:.2e}")
+
+    # gla scan: scalar + vector decay
+    B, S, H, dk, dv = 2, 128, 3, 16, 32
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, S, H, dk))
+    k = jax.random.normal(ks[1], (B, S, H, dk))
+    v = jax.random.normal(ks[2], (B, S, H, dv))
+    for name, lw, excl in [
+            ("mamba_scalar", -jax.nn.softplus(
+                jax.random.normal(ks[3], (B, S, H, 1))), False),
+            ("rwkv_vector", -0.01 * jax.nn.sigmoid(
+                jax.random.normal(ks[3], (B, S, H, dk))), True)]:
+        y1, s1 = ops.gla_scan(q, k, v, lw, chunk=32, exclusive=excl)
+        y2, s2 = ref.gla_scan_ref(q, k, v, lw, exclusive=excl)
+        err = float(jnp.max(jnp.abs(y1.astype(jnp.float32) - y2)))
+        us = timeit(lambda: jax.block_until_ready(
+            ops.gla_scan(q, k, v, lw, chunk=32, exclusive=excl)[0]))
+        emit(f"kernel.gla.{name}", us, f"max_err={err:.2e}")
+
+    # fp8 matmul
+    x8 = (10 * jax.random.normal(ks[0], (128, 256))).astype(jnp.float8_e4m3fn)
+    w8 = (10 * jax.random.normal(ks[1], (256, 192))).astype(jnp.float8_e4m3fn)
+    o = ops.fp8_matmul(x8, w8, bm=64, bn=64, bk=64)
+    err = float(jnp.max(jnp.abs(o - ref.fp8_matmul_ref(x8, w8))))
+    us = timeit(lambda: jax.block_until_ready(
+        ops.fp8_matmul(x8, w8, bm=64, bn=64, bk=64)))
+    emit("kernel.fp8_matmul.128x256x192", us, f"max_err={err:.2e}")
+
+    # fused rel-err reduction (the checker's hot loop)
+    a = np.random.randn(512, 777).astype(np.float32)
+    b = a + 1e-4 * np.random.randn(512, 777).astype(np.float32)
+    got = ops.rel_err(a, b)
+    want = ref.rel_err_ref(a, b)
+    us = timeit(lambda: ops.rel_err(a, b))
+    emit("kernel.relerr.512x777", us,
+         f"got={got:.3e} ref={want:.3e} agree={abs(got-want)/want < 1e-3}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,23 @@
+"""Paper §6.4: detection latency — naive loss-curve watching vs TTrace."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_worker
+
+
+def run():
+    out = run_worker("benchmarks.overhead_worker", devices=8, timeout=3600)
+    kv = dict(ln.split("\t") for ln in out.strip().splitlines()
+              if "\t" in ln)
+    print("# " + " | ".join(f"{k}={v}" for k, v in kv.items()))
+    emit("overhead.naive_seconds", float(kv["naive_seconds"]) * 1e6,
+         f"detect_step={kv['naive_detect_step']} "
+         f"gap={kv.get('loss_gap_final', '?')}")
+    emit("overhead.ttrace_seconds", float(kv["ttrace_seconds"]) * 1e6,
+         f"detected={kv['ttrace_detected']} "
+         f"localized={kv['ttrace_localized']}")
+    emit("overhead.speedup", 0.0, f"{kv['speedup']}x faster than naive")
+    return kv
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Benchmark entrypoint: one function per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+
+  table1   -> benchmarks.bug_table          (silent-bug detection sweep)
+  fig7+8   -> benchmarks.threshold_curves   (FP thresholds vs depth; bug sep)
+  fig9     -> benchmarks.fp8_smoothness     (FP8 recipes stay smooth)
+  sec6.4   -> benchmarks.overhead           (detection latency vs naive)
+  kernels  -> benchmarks.kernel_bench       (Pallas vs oracle sweep)
+  roofline -> benchmarks.roofline           (3-term analysis; --roofline)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: bug_table,curves,fp8,overhead,kernels,"
+                         "roofline")
+    ap.add_argument("--roofline", action="store_true",
+                    help="include the (slow, 512-device) roofline sweep")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    def on(name):
+        return want is None or name in want
+
+    print("name,us_per_call,derived")
+    failures = []
+
+    if on("kernels"):
+        from benchmarks import kernel_bench
+        _safe(kernel_bench.run, failures, "kernels")
+    if on("fp8"):
+        from benchmarks import fp8_smoothness
+        _safe(fp8_smoothness.run, failures, "fp8")
+    if on("curves"):
+        from benchmarks import threshold_curves
+        _safe(threshold_curves.run, failures, "curves")
+    if on("bug_table"):
+        from benchmarks import bug_table
+        _safe(bug_table.run, failures, "bug_table")
+    if on("overhead"):
+        from benchmarks import overhead
+        _safe(overhead.run, failures, "overhead")
+    if on("roofline") and (args.roofline or (want and "roofline" in want)):
+        from benchmarks import roofline
+        _safe(roofline.run, failures, "roofline")
+
+    if failures:
+        print(f"# {len(failures)} benchmark(s) failed: {failures}")
+        sys.exit(1)
+    print("# all benchmarks completed")
+
+
+def _safe(fn, failures, name):
+    try:
+        fn()
+    except Exception:
+        traceback.print_exc()
+        failures.append(name)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Detect and localize a real silent bug with TTrace (paper §3 workflow).
+
+Injects paper bug 1 — the tensor-parallel vocab embedding uses a wrong
+ownership mask — into the manual-collectives distributed GPT, then runs the
+full TTrace pipeline: threshold estimation, differential testing, and
+rewrite-mode localization.
+
+    PYTHONPATH=src python examples/find_injected_bug.py [bug_id]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import dataclasses
+import sys
+
+import jax
+
+from repro.bugs.registry import BUGS
+from repro.configs.base import get_config
+from repro.core.harness import make_model_runner, ttrace_check
+from repro.data.synthetic import make_batch
+from repro.models.model import Model
+from repro.optim.adamw import AdamW
+from repro.parallel.api import ParallelConfig, make_candidate_runner
+
+bug_id = sys.argv[1] if len(sys.argv) > 1 else "tp_wrong_embedding_mask"
+spec = BUGS[bug_id]
+print(f"injecting: {bug_id} [{spec.btype}] — {spec.description}\n"
+      f"  (paper analogue: {spec.paper_analogue})")
+
+cfg = dataclasses.replace(get_config("gpt-paper").reduced(),
+                          n_layers=2, vocab=512, tie_embeddings=True)
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+opt = AdamW(lr=1e-3)
+state = opt.init(params)
+batch = make_batch(cfg, 4, 32)
+
+req = set(spec.requires)
+pcfg = ParallelConfig(dp=2, cp=2 if "cp" in req else 1, tp=2,
+                      sp="sp" in req, zero1="zero1" in req,
+                      bugs=frozenset([bug_id]))
+
+reference = make_model_runner(model, params, opt, state)
+candidate = make_candidate_runner(cfg, pcfg, params, opt, state)
+
+result = ttrace_check(reference, candidate, batch, localize=True)
+print()
+print(result.summary())
+print(f"\nexpected module: {spec.expected_module}")
+print(f"TTrace localized: {result.localized_module}")

@@ -1,0 +1,37 @@
+"""Quickstart: train a small model end-to-end, then verify the training step
+with TTrace (reference vs re-jitted candidate must be equivalent).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs.base import get_config
+from repro.core.harness import make_model_runner, ttrace_check
+from repro.data.synthetic import make_batch
+from repro.launch.steps import make_train_step
+from repro.models.model import Model
+from repro.optim.adamw import AdamW
+
+cfg = get_config("tinyllama-1.1b").reduced()
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+opt = AdamW(lr=3e-4)
+state = opt.init(params)
+step = jax.jit(make_train_step(model, opt))
+
+print(f"training reduced {cfg.name} "
+      f"({sum(x.size for x in jax.tree.leaves(params))/1e6:.1f}M params)")
+for i in range(20):
+    batch = make_batch(cfg, 8, 64, step=i)
+    params, state, metrics = step(params, state, batch)
+    if i % 5 == 0:
+        print(f"  step {i}: loss {float(metrics['loss']):.4f}")
+
+# TTrace: one-iteration differential check (paper §3)
+ref = make_model_runner(model, params, opt, state)
+cand = make_model_runner(model, params, opt, state)
+result = ttrace_check(ref, cand, make_batch(cfg, 8, 64), localize=False)
+print("\nTTrace check (candidate == reference):",
+      "PASS" if result.passed else "FAIL")
+print(f"  {len(result.report.records)} tensors compared, "
+      f"{len(result.report.flagged)} flagged")

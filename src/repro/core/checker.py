@@ -1,0 +1,162 @@
+"""Equivalence checker + diagnosis report (paper §4.4, §3 steps 4-5).
+
+Compares a candidate trace against the reference trace using the estimated
+FP-round-off thresholds, produces a per-tensor report, and localizes the
+first diverging module in forward order (activations) / the deepest diverging
+module in backward order (gradients).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core import canonical as C
+from repro.core.collector import Trace
+from repro.core.thresholds import Thresholds, rel_err
+
+
+@dataclass
+class CheckRecord:
+    kind: str
+    name: str
+    rel_err: float
+    threshold: float
+    flagged: bool
+    note: str = ""
+
+
+@dataclass
+class Report:
+    records: list[CheckRecord] = field(default_factory=list)
+    merge_problems: list[str] = field(default_factory=list)
+    missing: list[str] = field(default_factory=list)
+    localized: Optional[str] = None       # module blamed for the bug
+    localization_mode: str = "propagation"  # or "rewrite"
+
+    @property
+    def flagged(self) -> list[CheckRecord]:
+        return [r for r in self.records if r.flagged]
+
+    @property
+    def passed(self) -> bool:
+        return not self.flagged and not self.merge_problems
+
+    def first_flagged_activation(self) -> Optional[CheckRecord]:
+        for r in self.records:            # records kept in forward tap order
+            if r.kind == C.KIND_ACT and r.flagged:
+                return r
+        return None
+
+    def summary(self, max_rows: int = 12) -> str:
+        lines = []
+        n_flag = len(self.flagged)
+        status = "PASS" if self.passed else "FAIL"
+        lines.append(f"TTrace report: {status} "
+                     f"({n_flag}/{len(self.records)} tensors flagged, "
+                     f"{len(self.merge_problems)} merge problems)")
+        for p in self.merge_problems:
+            lines.append(f"  [merge] {p}")
+        shown = 0
+        for r in self.records:
+            if r.flagged and shown < max_rows:
+                lines.append(f"  [{r.kind}] {r.name}: rel_err={r.rel_err:.3e} "
+                             f"> thr={r.threshold:.3e} {r.note}")
+                shown += 1
+        if n_flag > shown:
+            lines.append(f"  ... {n_flag - shown} more flagged tensors")
+        if self.localized:
+            lines.append(f"  LOCALIZED ({self.localization_mode}): bug in "
+                         f"module '{self.localized}'")
+        return "\n".join(lines)
+
+
+def _module_of(name: str) -> str:
+    return name.rsplit("/", 1)[0] if "/" in name else name
+
+
+def compare_traces(ref: Trace, cand: Trace, thr: Thresholds,
+                   kinds=(C.KIND_ACT, C.KIND_ACT_GRAD, C.KIND_PARAM_GRAD,
+                          C.KIND_MAIN_GRAD, C.KIND_PARAM_POST)) -> Report:
+    rep = Report()
+    for kind in kinds:
+        rs, cs = ref.section(kind), cand.section(kind)
+        for name, a in rs.items():
+            if name not in cs:
+                rep.missing.append(f"{kind}:{name} missing from candidate")
+                continue
+            b = cs[name]
+            if a.shape != b.shape:
+                rep.records.append(CheckRecord(
+                    kind, name, float("inf"), 0.0, True,
+                    note=f"shape {b.shape} != ref {a.shape}"))
+                continue
+            e = rel_err(a, b)
+            t = thr.threshold(kind, name)
+            rep.records.append(CheckRecord(kind, name, e, t, e > t))
+    # propagation-order localization: the first flagged forward activation is
+    # the earliest module whose computation diverged (paper §3 step 4).
+    first = rep.first_flagged_activation()
+    if first is not None:
+        rep.localized = _module_of(first.name)
+        rep.localization_mode = "propagation"
+    elif rep.flagged:
+        # Backward-only bug: wrong gradients propagate UPSTREAM (toward the
+        # embedding), so walking the backward pass from the loss, the first
+        # wrong tensor sits at the buggy module — i.e. the LAST flagged
+        # activation gradient in forward order.
+        agrads = [r for r in rep.records
+                  if r.kind == C.KIND_ACT_GRAD and r.flagged]
+        pgrads = [r for r in rep.records
+                  if r.kind == C.KIND_PARAM_GRAD and r.flagged]
+        if agrads:
+            rep.localized = _module_of(agrads[-1].name)
+            rep.localization_mode = "backward"
+        elif pgrads:
+            # only weight grads wrong (e.g. stale wgrad buffers): blame the
+            # module owning the parameter (strip generic leaf names; norm
+            # weights ARE their module)
+            name = pgrads[-1].name
+            head, _, leaf = name.rpartition(".")
+            rep.localized = head if leaf in ("w", "b") else name
+            rep.localization_mode = "backward"
+        else:
+            rep.localized = _module_of(rep.flagged[0].name)
+            rep.localization_mode = "optimizer"
+    return rep
+
+
+def localize_with_rewrites(run_ref, run_cand, batch, ref_trace: Trace,
+                           thr: Thresholds, scope_filter=None) -> Report:
+    """Rewrite-mode localization (paper §3 step 5): overwrite EVERY module's
+    input with a consistent generated tensor in both the reference and the
+    candidate, so an error in one module cannot propagate to the next; any
+    module whose OUTPUT still diverges is buggy in isolation.
+
+    ``run_ref/run_cand(batch, rewrites) -> Trace``.
+    """
+    from repro.core.generator import generate
+    rewrites = {}
+    for name, a in ref_trace.activations.items():
+        if not name.endswith("/input"):
+            continue
+        if scope_filter is not None and not scope_filter(name):
+            continue
+        cid = C.tap_to_id(name, C.KIND_ACT)
+        scale = float(np.std(a)) or 1.0
+        rewrites[name] = generate(cid, a.shape, str(a.dtype), scale=scale)
+    t_ref = run_ref(batch, rewrites)
+    t_cand = run_cand(batch, rewrites)
+    rep = compare_traces(t_ref, t_cand, thr, kinds=(C.KIND_ACT,))
+    # under rewrites, every flagged *output* names its buggy module directly;
+    # report the FIRST one in forward execution order
+    order = t_ref.meta.get("fwd_order") or [r.name for r in rep.records]
+    rank = {n: i for i, n in enumerate(order)}
+    flagged_mods = [(rank.get(r.name, 1 << 30), _module_of(r.name))
+                    for r in rep.records
+                    if r.flagged and r.name.endswith("/output")]
+    if flagged_mods:
+        rep.localized = min(flagged_mods)[1]
+        rep.localization_mode = "rewrite"
+    return rep

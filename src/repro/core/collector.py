@@ -1,0 +1,168 @@
+"""Trace collector (paper §4.3): runs one training iteration and records
+
+* forward activations of every tapped module (inputs + outputs),
+* activation gradients (via zero probes — the functional tensor-hook),
+* parameter gradients,
+* main (fp32, post-clip) gradients from the optimizer,
+* post-step parameters,
+
+as a ``Trace`` of host numpy arrays keyed by canonical tap/param names.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tap import TraceContext
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> flat named dict
+# ---------------------------------------------------------------------------
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def flatten_named(tree, sep=".") -> dict[str, jax.Array]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {sep.join(_key_str(k) for k in path): leaf for path, leaf in flat}
+
+
+def unflatten_named(names: dict, template):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        leaves.append(names[".".join(_key_str(k) for k in path)])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Trace
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Trace:
+    activations: dict[str, np.ndarray] = field(default_factory=dict)
+    act_grads: dict[str, np.ndarray] = field(default_factory=dict)
+    param_grads: dict[str, np.ndarray] = field(default_factory=dict)
+    main_grads: dict[str, np.ndarray] = field(default_factory=dict)
+    params_post: dict[str, np.ndarray] = field(default_factory=dict)
+    loss: float = float("nan")
+    grad_norm: float = float("nan")
+    meta: dict = field(default_factory=dict)
+
+    def section(self, kind: str) -> dict[str, np.ndarray]:
+        from repro.core import canonical as C
+        return {C.KIND_ACT: self.activations, C.KIND_ACT_GRAD: self.act_grads,
+                C.KIND_PARAM_GRAD: self.param_grads,
+                C.KIND_MAIN_GRAD: self.main_grads,
+                C.KIND_PARAM_POST: self.params_post}[kind]
+
+
+def _np(tree):
+    return {k: np.asarray(v) for k, v in tree.items()}
+
+
+# ---------------------------------------------------------------------------
+# Reference collector (single-device)
+# ---------------------------------------------------------------------------
+
+def tap_shapes(loss_callable, params, batch, rewrites=None
+               ) -> tuple[dict, list[str]]:
+    """Pass 1: eval_shape the forward to enumerate tap names/shapes.
+
+    Also returns the tap names in FORWARD ORDER (jax sorts dict pytrees, but
+    propagation-order bug localization needs execution order)."""
+    order: list[str] = []
+
+    def f(params):
+        ctx = TraceContext("rewrite" if rewrites else "collect",
+                           rewrites=rewrites or {})
+        loss_callable(params, batch, ctx)
+        order.clear()
+        order.extend(ctx.fwd.keys())
+        return ctx.fwd
+
+    return jax.eval_shape(f, params), order
+
+
+def trace_train_step(model, params, batch, opt=None, opt_state=None,
+                     rewrites: Optional[dict] = None,
+                     collect_act_grads: bool = True,
+                     tap_filter: Optional[Callable[[str], bool]] = None,
+                     jit: bool = True) -> tuple[Trace, dict, Optional[dict]]:
+    """Run ONE training iteration of the single-device reference with full
+    trace collection.  Returns (trace, new_params, new_opt_state).
+
+    ``rewrites``: {tap_name: np/jnp array} — overwrite module inputs
+    (localization mode / threshold estimation).
+    """
+    def loss_call(p, b, ctx):
+        loss, _ = model.loss(p, b, ctx=ctx)
+        return loss
+
+    return trace_fn_step(loss_call, params, batch, opt=opt,
+                         opt_state=opt_state, rewrites=rewrites,
+                         collect_act_grads=collect_act_grads,
+                         tap_filter=tap_filter, jit=jit)
+
+
+def trace_fn_step(loss_call, params, batch, opt=None, opt_state=None,
+                  rewrites=None, collect_act_grads=True, tap_filter=None,
+                  jit=True) -> tuple[Trace, dict, Optional[dict]]:
+    """Generic collector over any ``loss_call(params, batch, ctx) -> loss``.
+
+    Used for both the reference model and candidate step functions that
+    compute loss differently (e.g. pipeline-partitioned execution).
+    """
+    rewrites_j = (None if rewrites is None
+                  else {k: jnp.asarray(v) for k, v in rewrites.items()})
+    shapes, fwd_order = tap_shapes(loss_call, params, batch, rewrites_j)
+    mode = "rewrite" if rewrites_j else "collect"
+
+    if collect_act_grads:
+        probes = {k: jnp.zeros(s.shape, jnp.float32)
+                  for k, s in shapes.items()
+                  if (tap_filter is None or tap_filter(k))
+                  and jnp.issubdtype(s.dtype, jnp.floating)}
+    else:
+        probes = {}
+
+    def loss_fn(p, probes):
+        ctx = TraceContext(mode, probes=probes, rewrites=rewrites_j or {})
+        loss = loss_call(p, batch, ctx)
+        return loss, ctx.fwd
+
+    def step(p, probes):
+        (loss, fwd), (pgrads, agrads) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(p, probes)
+        return loss, fwd, pgrads, agrads
+
+    step_c = jax.jit(step) if jit else step
+    loss, fwd, pgrads, agrads = step_c(params, probes)
+
+    tr = Trace()
+    tr.loss = float(loss)
+    tr.activations = {k: np.asarray(fwd[k]) for k in fwd_order}
+    tr.act_grads = {k: np.asarray(agrads[k]) for k in fwd_order
+                    if k in agrads}
+    tr.param_grads = _np(flatten_named(pgrads))
+    tr.meta["fwd_order"] = list(fwd_order)
+
+    new_params, new_state = params, opt_state
+    if opt is not None:
+        upd = jax.jit(opt.update) if jit else opt.update
+        new_params, new_state, info = upd(params, pgrads, opt_state)
+        tr.main_grads = _np(flatten_named(info.main_grads))
+        tr.params_post = _np(flatten_named(new_params))
+        tr.grad_norm = float(info.grad_norm)
+    return tr, new_params, new_state

@@ -1,0 +1,67 @@
+"""Consistent distributed tensor generator (paper §4.2).
+
+The canonical identifier of a tensor is hashed into a PRNG seed; the same
+logical full tensor is generated for the single-device reference and for the
+distributed candidate, which receives only its shard (sliced per the user's
+ShardSpec).  Numpy's Philox generator is used so values are independent of
+device layout, JAX version and backend — determinism is the whole point.
+
+Uses: (1) module-input rewriting for bug localization (§3 step 5), where every
+module's input is overwritten so an upstream error cannot propagate; and
+(2) injecting consistent main gradients to differentially test the optimizer.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.annotations import ShardSpec, shard_concat_dim, slices_for_rank
+from repro.core.canonical import CanonicalId
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.Generator(np.random.Philox(seed))
+
+
+def generate(cid, shape, dtype="float32", dist: str = "normal",
+             scale: float = 1.0) -> np.ndarray:
+    """Generate the logical full tensor for ``cid`` (CanonicalId or str)."""
+    seed = cid.seed() if isinstance(cid, CanonicalId) else \
+        CanonicalId(0, 0, "gen", str(cid), "value").seed()
+    rng = _rng(seed)
+    if dist == "normal":
+        x = rng.standard_normal(shape, dtype=np.float32) * scale
+    elif dist == "uniform":
+        x = (rng.random(shape, dtype=np.float32) * 2 - 1) * scale
+    else:
+        raise ValueError(dist)
+    return x.astype(dtype)
+
+
+def generate_shard(cid, global_shape, spec: ShardSpec, sizes: dict,
+                   coords: dict, dtype="float32", dist="normal",
+                   scale: float = 1.0) -> np.ndarray:
+    """The rank-local shard of the generated logical full tensor."""
+    full = generate(cid, global_shape, dtype, dist, scale)
+    return extract_shard(full, spec, sizes, coords)
+
+
+def extract_shard(full: np.ndarray, spec: ShardSpec, sizes: dict,
+                  coords: dict) -> np.ndarray:
+    frags = slices_for_rank(spec, full.shape, sizes, coords)
+    pieces = [full[f] for f in frags]
+    if len(pieces) == 1:
+        return pieces[0]
+    cdim = shard_concat_dim(spec)
+    assert cdim is not None, "multi-fragment shard without a concat dim"
+    return np.concatenate(pieces, axis=cdim % full.ndim)
+
+
+def perturb(x: np.ndarray, rel_eps: float, seed: int = 0) -> np.ndarray:
+    """x + dX with ||dX|| = rel_eps * ||x|| (threshold estimation, §5.2)."""
+    rng = _rng(seed ^ 0x9E3779B97F4A7C15)
+    d = rng.standard_normal(x.shape).astype(np.float32)
+    nx = np.linalg.norm(x.astype(np.float32))
+    nd = np.linalg.norm(d)
+    if nd == 0 or nx == 0:
+        return x
+    return (x.astype(np.float32) + d * (rel_eps * nx / nd)).astype(x.dtype)

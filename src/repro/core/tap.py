@@ -1,0 +1,123 @@
+"""Functional trace taps — the JAX-native analogue of PyTorch module hooks.
+
+TTrace (paper §4.3) collects per-module forward inputs/outputs and backward
+gradients with PyTorch module/tensor hooks.  JAX is functional, so instead:
+
+* every framework module calls ``ctx.tap(role, x)`` inside the traced step;
+* in **collect** mode the tapped values become auxiliary outputs of the jitted
+  function (pure — works under jit, pjit, remat and scan);
+* activation *gradients* are obtained with **zero probes**: ``tap`` adds a
+  zeros-valued probe parameter to the activation, and ``jax.grad`` w.r.t. the
+  probe pytree equals the gradient w.r.t. the tapped activation;
+* in **rewrite** mode (paper §3 step 5, bug localization) the tap substitutes
+  a consistent generated tensor for the module input, so an error in one
+  module cannot propagate into the next.
+
+Tap names are canonical module paths (see core/canonical.py) joined with the
+tensor role, e.g. ``layers.3.attn.linear_qkv/output``.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# tensor roles (paper §4.3 trace kinds)
+ROLE_INPUT = "input"
+ROLE_OUTPUT = "output"
+
+
+class TraceContext:
+    """Threaded through a model's forward; records / rewrites tapped tensors.
+
+    modes:
+      "off"      — taps are identity (production path; also the dry-run path)
+      "collect"  — record forward values; add zero probes for grad collection
+      "rewrite"  — overwrite tapped tensors with ``rewrites[name]`` AND record
+    """
+
+    def __init__(self, mode: str = "collect", probes: Optional[dict] = None,
+                 rewrites: Optional[dict] = None):
+        assert mode in ("off", "collect", "rewrite")
+        self.mode = mode
+        self.probes = probes
+        self.rewrites = rewrites or {}
+        self.fwd: dict[str, jax.Array] = {}
+        self.meta: dict[str, dict] = {}
+        self._prefix: list[str] = []
+
+    # ---- scoping -----------------------------------------------------------
+    @contextmanager
+    def scope(self, name: str):
+        self._prefix.append(name)
+        try:
+            yield self
+        finally:
+            self._prefix.pop()
+
+    def path(self, role: str = "") -> str:
+        p = ".".join(self._prefix)
+        if not role:
+            return p
+        return f"{p}/{role}" if p else role
+
+    # ---- tapping -----------------------------------------------------------
+    def tap(self, role: str, x: jax.Array, **meta) -> jax.Array:
+        if self.mode == "off":
+            return x
+        name = self.path(role)
+        if self.mode == "rewrite" and name in self.rewrites:
+            # straight-through overwrite: the VALUE becomes the rewrite, but
+            # gradients still flow through the original tensor — so threshold
+            # estimation (eps-perturbed rewrites) keeps the true gradient
+            # topology, and localization mode stays differentiable.
+            r = self.rewrites[name].astype(x.dtype)
+            x = x + jax.lax.stop_gradient(r - x)
+        if name in self.fwd:
+            raise ValueError(
+                f"duplicate canonical tensor identifier {name!r} in one trace")
+        self.fwd[name] = x
+        self.meta[name] = dict(meta)
+        if self.probes is not None and name in self.probes:
+            x = x + self.probes[name].astype(x.dtype)
+        return x
+
+    def tap_scan(self, role: str, x: jax.Array, **meta) -> jax.Array:
+        """Tap inside a lax.scan body: values are recorded stacked along the
+        scan (layer) axis; the collector splits them into per-layer canonical
+        names afterwards.  Probes/rewrites are not supported inside scans —
+        scanned stacks are for dry-run-scale models where ctx is "off"."""
+        if self.mode == "off":
+            return x
+        return self.tap(role, x, scanned=True, **meta)
+
+
+class _NullCtx(TraceContext):
+    def __init__(self):
+        super().__init__(mode="off")
+
+    def tap(self, role, x, **meta):
+        return x
+
+
+NULL_CTX = _NullCtx()
+
+
+def ensure_ctx(ctx: Optional[TraceContext]) -> TraceContext:
+    return NULL_CTX if ctx is None else ctx
+
+
+def zero_probes_like(shapes: dict[str, jax.ShapeDtypeStruct],
+                     select=None) -> dict[str, jax.Array]:
+    """Build the zero-probe pytree for the tap names in ``shapes``.
+
+    ``select`` optionally restricts which taps receive probes (activation
+    gradients are only defined for tensors on the differentiation path)."""
+    out = {}
+    for name, sd in shapes.items():
+        if select is not None and not select(name):
+            continue
+        out[name] = jnp.zeros(sd.shape, jnp.float32)
+    return out

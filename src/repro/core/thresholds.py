@@ -1,0 +1,117 @@
+"""Expected-FP-round-off-error estimation (paper §5).
+
+The threshold for "is this difference a bug or just floating point?" is
+estimated empirically, exactly as §5.2 prescribes: run the reference twice —
+once on X and once on X + dX with ||dX|| ~= eps_mch * ||X|| — and record the
+induced relative Frobenius error of every traced tensor.  Under the layer
+smoothness assumptions (Thm 5.1-5.3) the induced differences track the
+accumulated round-off of any *reasonable* FP implementation, so a candidate
+whose differences are far above them (paper observes ~100x for real bugs) is
+flagged.
+
+For token (integer) inputs the perturbation is applied at the first float
+tensor on the differentiation path — the embedding output — via the rewrite
+mechanism; for audio/VLM the float frontend features are perturbed directly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import canonical as C
+from repro.core.collector import Trace
+from repro.core.generator import perturb
+
+MACHINE_EPS = {
+    "float32": 2.0 ** -24,
+    "bfloat16": 2.0 ** -8,
+    "float16": 2.0 ** -11,
+    # fp8 recipes accumulate in >=bf16 (paper §6.7): thresholds are expressed
+    # in bf16 epsilons, perturbations injected at bf16 magnitude.
+    "float8_e4m3fn": 2.0 ** -8,
+}
+
+
+# Set to a positive element count to route big-tensor comparisons through
+# the fused Pallas reduction (repro.kernels.relerr) — the TPU-idiomatic
+# analogue of the paper's multithreaded C++ checker.  Off by default on CPU
+# (the interpreter is slower than numpy); on TPU set e.g. 1 << 20.
+FUSED_RELERR_MIN_ELEMS = int(__import__("os").environ.get(
+    "REPRO_FUSED_RELERR_MIN_ELEMS", "0"))
+
+
+def rel_err(a: np.ndarray, b: np.ndarray) -> float:
+    """Relative Frobenius error ||a-b|| / ||a|| (paper §2.2)."""
+    if FUSED_RELERR_MIN_ELEMS and np.asarray(a).size >= FUSED_RELERR_MIN_ELEMS:
+        from repro.kernels.ops import rel_err as fused
+        return fused(np.asarray(a, np.float32), np.asarray(b, np.float32))
+    a64 = np.asarray(a, np.float64)
+    b64 = np.asarray(b, np.float64)
+    na = np.linalg.norm(a64)
+    d = np.linalg.norm(a64 - b64)
+    return float(d / na) if na > 0 else float(d)
+
+
+@dataclass
+class Thresholds:
+    eps: float
+    margin: float = 8.0
+    floor_mult: float = 4.0
+    per_tensor: dict[str, dict[str, float]] = field(default_factory=dict)
+    # per kind: {name: estimated FP rel err}
+
+    # Post-step parameters pass through Adam's elementwise m/sqrt(v)
+    # normalization, which amplifies *uncorrelated* reduction-order noise
+    # more than the correlated perturbation used for estimation; a wider
+    # margin absorbs that (bug-induced errors are ~100x above, Fig 8).
+    kind_margins = {C.KIND_PARAM_POST: 64.0}
+
+    def threshold(self, kind: str, name: str) -> float:
+        est = self.per_tensor.get(kind, {}).get(name, 0.0)
+        margin = self.kind_margins.get(kind, self.margin)
+        return margin * max(est, self.floor_mult * self.eps)
+
+
+def _diff_sections(t1: Trace, t2: Trace) -> dict[str, dict[str, float]]:
+    out = {}
+    for kind in (C.KIND_ACT, C.KIND_ACT_GRAD, C.KIND_PARAM_GRAD,
+                 C.KIND_MAIN_GRAD, C.KIND_PARAM_POST):
+        s1, s2 = t1.section(kind), t2.section(kind)
+        out[kind] = {k: rel_err(s1[k], s2[k]) for k in s1 if k in s2}
+    return out
+
+
+def perturbed_batch_or_rewrites(batch: dict, base_trace: Trace,
+                                eps: float, seed: int = 0):
+    """Returns (batch', rewrites').  Float model inputs are perturbed in the
+    batch; token-only models are perturbed at the embedding output."""
+    float_keys = [k for k, v in batch.items()
+                  if np.issubdtype(np.asarray(v).dtype, np.floating)
+                  and k != "loss_mask"]
+    if float_keys:
+        b2 = dict(batch)
+        for i, k in enumerate(float_keys):
+            b2[k] = perturb(np.asarray(batch[k]), eps, seed=seed + i)
+        return b2, None
+    emb = "embedding/output"
+    assert emb in base_trace.activations, (
+        "no float inputs and no embedding/output tap to perturb")
+    rew = {emb: perturb(base_trace.activations[emb], eps, seed=seed)}
+    return batch, rew
+
+
+def estimate_thresholds(run_trace, batch: dict, eps: float,
+                        margin: float = 8.0, seed: int = 0) -> tuple[
+                            Thresholds, Trace]:
+    """``run_trace(batch, rewrites) -> Trace`` runs the REFERENCE.
+
+    Returns (thresholds, base_reference_trace) — the base trace is reused as
+    the reference side of the differential test, so threshold estimation
+    costs exactly one extra iteration (paper §3 step 1).
+    """
+    t1 = run_trace(batch, None)
+    b2, rew = perturbed_batch_or_rewrites(batch, t1, eps, seed)
+    t2 = run_trace(b2, rew)
+    thr = Thresholds(eps=eps, margin=margin, per_tensor=_diff_sections(t1, t2))
+    return thr, t1

@@ -1,0 +1,75 @@
+"""Deterministic synthetic data pipeline.
+
+All samples are generated statelessly from (seed, step, shard) via
+``jax.random.fold_in`` so every data-parallel rank, the single-device
+reference, and any restart reproduce bit-identical batches — the data-side
+half of TTrace's "consistent distributed tensor generator" guarantee
+(paper §4.2): the reference and the candidate must consume identical inputs.
+
+Token streams follow a Zipf-like marginal (realistic logit/loss magnitudes);
+audio/vision frontends are stubbed with Gaussian frame/patch features of the
+configured dims.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+
+
+def _tokens(key, batch, seq, vocab):
+    """Zipf-ish token stream: rank ~ exp(u * log(V))."""
+    u = jax.random.uniform(key, (batch, seq), jnp.float32, 1e-6, 1.0)
+    alpha = 1.1
+    ranks = jnp.power(u, -1.0 / (alpha - 1.0))          # pareto
+    toks = jnp.clip(ranks.astype(jnp.int32) - 1, 0, vocab - 1)
+    perm = jax.random.permutation(jax.random.fold_in(key, 1), vocab)
+    return perm[toks]
+
+
+def make_batch(cfg: ArchConfig, batch: int, seq: int, *, seed: int = 0,
+               step: int = 0) -> dict:
+    """One global batch for ``train_step``/``prefill_step``."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    if cfg.arch_type == "audio":
+        kf, km, kt = jax.random.split(key, 3)
+        feats = jax.random.normal(kf, (batch, seq, cfg.audio_dim), jnp.float32)
+        mask = jax.random.bernoulli(km, 0.08, (batch, seq))
+        targets = jax.random.randint(kt, (batch, seq), 0, cfg.vocab)
+        return {"features": feats, "mask": mask, "labels": targets}
+    if cfg.arch_type == "vlm":
+        n_img = min(cfg.n_image_tokens, max(seq - 16, 1))
+        text_len = seq - n_img
+        ki, kt = jax.random.split(key)
+        img = jax.random.normal(ki, (batch, n_img, cfg.vision_dim),
+                                jnp.float32)
+        toks = _tokens(kt, batch, text_len + 1, cfg.vocab)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+                "image_embeds": img}
+    toks = _tokens(key, batch, seq + 1, cfg.vocab)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def make_decode_inputs(cfg: ArchConfig, batch: int, *, seed: int = 0,
+                       step: int = 0) -> dict:
+    key = jax.random.fold_in(jax.random.PRNGKey(1000 + seed), step)
+    toks = jax.random.randint(key, (batch, 1), 0, cfg.vocab)
+    return {"tokens": toks}
+
+
+class DataLoader:
+    """Iterator facade over the stateless generator (launcher-facing)."""
+
+    def __init__(self, cfg: ArchConfig, shape: InputShape, seed: int = 0):
+        self.cfg, self.shape, self.seed = cfg, shape, seed
+        self.step = 0
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        b = make_batch(self.cfg, self.shape.global_batch, self.shape.seq_len,
+                       seed=self.seed, step=self.step)
+        self.step += 1
+        return b

@@ -1,0 +1,127 @@
+"""Pallas TPU flash attention (GQA, causal / sliding-window / bidirectional).
+
+Online-softmax attention with explicit BlockSpec VMEM tiling:
+
+  grid = (batch * q_heads, S/bq, S/bk)   — kv dim is the sequential axis
+  q block   (bq, D) in VMEM
+  k/v block (bk, D) in VMEM, indexed through h // G so GQA never
+            materializes repeated KV heads
+  scratch   m, l (bq,) and acc (bq, D) fp32 in VMEM, carried across the
+            kv grid dimension; the output block is written on the last step.
+
+MXU alignment: default bq=bk=512 blocks with D in {64, 128} keep the matmul
+dims multiples of (8,128) tiles.  ``interpret=True`` (CPU container) runs the
+same kernel body under the Pallas interpreter for validation against
+``ref.attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  mode: str, window: int, bq: int, bk: int, nk: int,
+                  scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    if mode == "bidirectional":
+        needed = ki >= 0
+    elif mode == "swa":
+        needed = (ki * bk <= qi * bq + bq - 1) & \
+                 (ki * bk + bk - 1 > qi * bq - window)
+    else:  # causal
+        needed = ki * bk <= qi * bq + bq - 1
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)
+        k = k_ref[...].astype(jnp.float32)
+        v = v_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if mode == "causal":
+            mask = k_pos <= q_pos
+        elif mode == "swa":
+            mask = (k_pos <= q_pos) & (k_pos > q_pos - window)
+        else:
+            mask = None
+        if mask is not None:
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, mode: str = "causal", window: int = 0,
+                    bq: int = 512, bk: int = 512, interpret: bool = True):
+    """q: (B,S,H,D); k/v: (B,S,Hkv,D).  Returns (B,S,H,D)."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0
+    nq, nk = S // bq, S // bk
+    scale = 1.0 / (D ** 0.5)
+
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        b, h = bh // H, bh % H
+        return (b * Hkv + h // G, ki, 0)
+
+    kernel = functools.partial(_flash_kernel, mode=mode, window=window,
+                               bq=bq, bk=bk, nk=nk, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, bq, D), q_map),
+            pl.BlockSpec((None, bk, D), kv_map),
+            pl.BlockSpec((None, bk, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((None, bq, D), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max
+            pltpu.VMEM((bq,), jnp.float32),       # running denom
+            pltpu.VMEM((bq, D), jnp.float32),     # running accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,58 @@
+"""Pallas TPU tiled FP8 (e4m3) matmul with fp32 accumulation.
+
+Grid (M/bm, N/bn, K/bk); the K axis is sequential with an (bm, bn) fp32 VMEM
+accumulator.  Operands arrive pre-quantized (float8_e4m3fn) with scales
+applied outside (repro.precision.fp8 owns the recipes); on MXU-native-fp8
+TPUs the dot stays in fp8, elsewhere operands upcast in-register.  Block
+shapes default to (256, 256, 256) — multiples of the (8,128)/(128,128)
+MXU tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def fp8_matmul(x, w, bm: int = 256, bn: int = 256, bk: int = 256,
+               interpret: bool = True):
+    """x: (M,K) float8_e4m3fn; w: (K,N) float8_e4m3fn -> (M,N) float32."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    kernel = functools.partial(_mm_kernel, nk=K // bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, K // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,42 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``INTERPRET`` defaults to True because this container has no TPU; on real
+hardware set ``repro.kernels.ops.INTERPRET = False`` (or the
+REPRO_PALLAS_INTERPRET=0 env var) and the same kernels compile to Mosaic.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import fp8_matmul as _mm
+from repro.kernels import relerr as _re
+from repro.kernels import ssm_scan as _ssm
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def flash_attention(q, k, v, mode="causal", window=0, bq=512, bk=512):
+    return _fa.flash_attention(q, k, v, mode=mode, window=window, bq=bq,
+                               bk=bk, interpret=INTERPRET)
+
+
+def gla_scan(q, k, v, log_w, chunk=128, exclusive=False, u=None):
+    """Kernel-backed equivalent of models.ssm.lin_attn_chunked (s0=0)."""
+    y, s = _ssm.gla_scan(q, k, v, log_w, chunk=chunk, exclusive=exclusive,
+                         interpret=INTERPRET)
+    if u is not None:
+        bonus = jnp.einsum("bshk,hk,bshk->bsh", q.astype(jnp.float32),
+                           u.astype(jnp.float32), k.astype(jnp.float32))
+        y = y + bonus[..., None] * v.astype(jnp.float32)
+    return y.astype(v.dtype), s
+
+
+def fp8_matmul(x, w, bm=256, bn=256, bk=256):
+    return _mm.fp8_matmul(x, w, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)
+
+
+def rel_err(a, b) -> float:
+    return _re.rel_err_fused(a, b, interpret=INTERPRET)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for every Pallas kernel (the kernel test contracts)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# flash attention oracle: the naive reference in the model zoo
+from repro.models.attention import attention_ref  # noqa: F401
+
+# gla_scan oracle: the step-by-step recurrence
+from repro.models.ssm import lin_attn_recurrent, lin_attn_chunked  # noqa: F401
+
+
+def gla_scan_ref(q, k, v, log_w, exclusive=False):
+    """Recurrent (sequential) oracle matching kernels.ssm_scan.gla_scan."""
+    u = jnp.zeros((q.shape[2], q.shape[3]), jnp.float32) if exclusive else None
+    y, s = lin_attn_recurrent(q, k, v, log_w, u=u)
+    return y.astype(jnp.float32), s
+
+
+def fp8_matmul_ref(x, w):
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def rel_err_ref(a, b) -> float:
+    a64 = np.asarray(a, np.float64)
+    b64 = np.asarray(b, np.float64)
+    na = np.linalg.norm(a64)
+    d = np.linalg.norm(a64 - b64)
+    return float(d / na) if na > 0 else float(d)

@@ -1,0 +1,125 @@
+"""Pallas TPU chunked gated-linear-attention scan (Mamba2 SSD / RWKV-6 core).
+
+State-space recurrence  S_t = diag(w_t) S_{t-1} + k_t v_t^T,  y_t = q_t S_t
+in chunked form: the grid walks (batch*heads, n_chunks) with the chunk axis
+sequential; the per-head state (dk, dv) lives in fp32 VMEM scratch and is
+carried across chunks.  Within a chunk everything is dense matmuls (MXU),
+using the clamped "safe gate" factorization — identical math to
+``repro.models.ssm.lin_attn_chunked``, which doubles as this kernel's oracle
+(with the recurrent scan as the independent gold reference).
+
+``exclusive=True`` reads S_{t-1} instead of S_t (the RWKV-6 convention); the
+current-token bonus u is a cheap elementwise term added by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CLAMP = 20.0
+
+
+def _gla_kernel(q_ref, k_ref, v_ref, lw_ref, y_ref, sfin_ref, state_ref, *,
+                chunk: int, nc: int, exclusive: bool, scalar_decay: bool):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    q = q_ref[...].astype(jnp.float32)          # (C, dk)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)          # (C, dv)
+    lw = lw_ref[...].astype(jnp.float32)        # (C, dk)
+
+    L = jnp.cumsum(lw, axis=0)
+    Lq = L - lw if exclusive else L
+    q_t = q * jnp.exp(Lq)
+    if scalar_decay:
+        # exact relative decay (SSD segsum): scalar per head, no clamping
+        D = jnp.exp(jnp.minimum(Lq[:, 0][:, None] - L[:, 0][None, :], 0.0))
+        A = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * D
+    else:
+        k_t = k * jnp.exp(-jnp.maximum(L, -CLAMP))
+        A = jax.lax.dot_general(q_t, k_t, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = (s_idx < t_idx) if exclusive else (s_idx <= t_idx)
+    A = jnp.where(causal, A, 0.0)
+
+    s = state_ref[...]                          # (dk, dv)
+    y = (jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+         + jax.lax.dot_general(q_t, s, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32))
+    y_ref[...] = y.astype(y_ref.dtype)
+
+    Lc = L[-1:, :]                              # (1, dk)
+    k_dec = k * jnp.exp(Lc - L)
+    state_ref[...] = (jnp.exp(Lc[0])[:, None] * s
+                      + jax.lax.dot_general(
+                          k_dec, v, (((0,), (0,)), ((), ())),
+                          preferred_element_type=jnp.float32))
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        sfin_ref[...] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "exclusive",
+                                             "interpret"))
+def gla_scan(q, k, v, log_w, chunk: int = 128, exclusive: bool = False,
+             interpret: bool = True):
+    """q,k,log_w: (B,S,H,dk); v: (B,S,H,dv).
+    Returns y (B,S,H,dv) fp32-accumulated, s_final (B,H,dk,dv) fp32."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    dw = log_w.shape[-1]
+    scalar_decay = dw == 1
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    BH = B * H
+
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(BH, S, x.shape[-1])
+
+    qf, kf, vf, lwf = fold(q), fold(k), fold(v), fold(log_w)
+
+    def seq_map(bh, ci):
+        return (bh, ci, 0)
+
+    def state_map(bh, ci):
+        return (bh, 0, 0)
+
+    kernel = functools.partial(_gla_kernel, chunk=chunk, nc=nc,
+                               exclusive=exclusive,
+                               scalar_decay=scalar_decay)
+    y, sfin = pl.pallas_call(
+        kernel,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((None, chunk, dk), seq_map),
+            pl.BlockSpec((None, chunk, dk), seq_map),
+            pl.BlockSpec((None, chunk, dv), seq_map),
+            pl.BlockSpec((None, chunk, dw), seq_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, chunk, dv), seq_map),
+            pl.BlockSpec((None, dk, dv), state_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, dv), jnp.float32),
+            jax.ShapeDtypeStruct((BH, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(qf, kf, vf, lwf)
+    y = y.reshape(B, H, S, dv).transpose(0, 2, 1, 3)
+    return y, sfin.reshape(B, H, dk, dv)

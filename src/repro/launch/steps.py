@@ -1,0 +1,138 @@
+"""Step functions + input specs for training / prefill / decode.
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins for every model input
+of an (arch x input-shape) pair — weak-type-correct, shardable, and never
+allocated; the dry-run lowers against them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models.model import Model
+from repro.optim.adamw import AdamW
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStructs for the step function's data inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if cfg.arch_type == "audio":
+            return {"features": sds((B, S, cfg.audio_dim), "float32"),
+                    "mask": sds((B, S), "bool"),
+                    "labels": sds((B, S), "int32")}
+        if cfg.arch_type == "vlm":
+            n_img = min(cfg.n_image_tokens, S - 16)
+            return {"tokens": sds((B, S - n_img), "int32"),
+                    "labels": sds((B, S - n_img), "int32"),
+                    "image_embeds": sds((B, n_img, cfg.vision_dim),
+                                        "float32")}
+        return {"tokens": sds((B, S), "int32"),
+                "labels": sds((B, S), "int32")}
+    # decode: one new token against a seq_len cache
+    return {"tokens": sds((B, 1), "int32"),
+            "pos": sds((), "int32")}
+
+
+def cache_specs(model: Model, shape: InputShape) -> dict:
+    """ShapeDtypeStructs for the decode cache (eval_shape — no allocation)."""
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+
+
+def make_train_step(model: Model, opt: AdamW, n_micro: int = 1):
+    """Training step with gradient accumulation over ``n_micro`` microbatches
+    (scan): per-layer activation saves scale with the microbatch, grads
+    accumulate in fp32 sharded like the optimizer state."""
+    def train_step(params, opt_state, batch):
+        def loss_fn(p, mb):
+            loss, metrics = model.loss(p, mb)
+            return loss, metrics
+
+        if n_micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]), batch)
+
+            def micro(gsum, mb):
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                # keep the accumulator ZeRO-sharded inside the loop too —
+                # otherwise the carry adopts the (model-only) grad sharding
+                gsum = _constrain_opt_like(gsum)
+                return gsum, (loss, metrics)
+
+            gzero = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            gzero = _constrain_opt_like(gzero)
+            gsum, (losses, metricses) = jax.lax.scan(micro, gzero, mbs)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, metricses)
+
+        params, opt_state, info = opt.update(params, grads, opt_state)
+        return params, opt_state, {"loss": loss,
+                                   "grad_norm": info.grad_norm,
+                                   "lr": info.lr, **metrics}
+    return train_step
+
+
+def _constrain_opt_like(tree):
+    """ZeRO-style sharding constraint for the fp32 gradient accumulator:
+    like the params PLUS the data axes (an unconstrained fp32 accumulator
+    sharded over "model" only costs e.g. 27 GiB/device for qwen1.5-110b —
+    EXPERIMENTS.md §Perf)."""
+    from repro.core.collector import flatten_named, unflatten_named
+    from repro.sharding import rules
+    ctx = rules.current()
+    if ctx is None:
+        return tree
+    named = flatten_named(tree)
+    sh = rules.param_shardings({k: v.shape for k, v in named.items()},
+                               ctx.mesh, opt_state=True)
+    out = {k: jax.lax.with_sharding_constraint(v, sh[k])
+           for k, v in named.items()}
+    return unflatten_named(out, tree)
+
+
+def default_n_micro(cfg: ArchConfig, shape: InputShape, dp_total: int,
+                    act_budget_bytes: int = 5 << 30) -> int:
+    """Pick a microbatch count so per-device layer-boundary saves
+    (L * S * d_model * 2B * B_micro_local) fit the activation budget."""
+    import numpy as np
+    if shape.kind != "train":
+        return 1
+    b_local = max(1, shape.global_batch // dp_total)
+    per_seq = cfg.n_layers * shape.seq_len * cfg.d_model * 2
+    want = max(1, int(np.ceil(b_local * per_seq / act_budget_bytes)))
+    while b_local % want:
+        want += 1
+    return min(want, b_local)
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        h, aux = model.forward(params, batch)
+        # return last-position logits (the serving prefill contract) so the
+        # full (B,S,V) logits tensor never materializes
+        logits = model.unembed(params, h[:, -1:])
+        return logits
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, cache, batch):
+        logits, cache = model.decode_step(params, cache, batch["tokens"],
+                                          batch["pos"])
+        return logits, cache
+    return serve_step

@@ -1,0 +1,395 @@
+"""Attention variants: GQA (full / sliding-window / bidirectional), MLA.
+
+Reference semantics in pure jnp.  Long sequences route through a blockwise
+(online-softmax) implementation so prefill_32k/long_500k never materialize the
+(S x S) score matrix; the Pallas flash kernel (repro/kernels/flash_attention)
+is the TPU execution path for the same math and is validated against
+``attention_ref`` in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.tap import ensure_ctx
+from repro.models.layers import linear, linear_init, apply_rope, rmsnorm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+def _mask(mode: str, q_pos, k_pos, window: int):
+    """q_pos: (Q,), k_pos: (K,) -> bool (Q,K); True = attend."""
+    if mode == "bidirectional":
+        return jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    m = k_pos[None, :] <= q_pos[:, None]
+    if mode == "swa":
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def attention_ref(q, k, v, mode="causal", window=0, q_pos=None, k_pos=None):
+    """q: (B,Q,H,D), k/v: (B,K,Hkv,D[v]).  Naive reference (materializes scores)."""
+    B, Q, H, D = q.shape
+    K, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    if q_pos is None:
+        q_pos = jnp.arange(Q)
+    if k_pos is None:
+        k_pos = jnp.arange(K)
+    qg = q.reshape(B, Q, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(D).astype(jnp.float32)
+    m = _mask(mode, q_pos, k_pos, window)
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Q, H, v.shape[-1]).astype(q.dtype)
+
+
+# cost-analysis mode: run the two-level flash recurrence as unrolled python
+# loops so XLA counts every block's traffic/flops (loop bodies count once)
+UNROLL_BLOCKWISE = False
+
+
+def attention_blockwise(q, k, v, mode="causal", window=0, q_block=512,
+                        kv_block=512):
+    """Flash-style two-level scan: O(B*H*qb*kb) peak instead of O(S^2)."""
+    B, S, H, D = q.shape
+    K, Hkv, Dv = k.shape[1], k.shape[2], v.shape[-1]
+    G = H // Hkv
+    assert S % q_block == 0 and K % kv_block == 0, (S, K, q_block, kv_block)
+    nq, nk = S // q_block, K // kv_block
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    qb = q.reshape(B, nq, q_block, Hkv, G, D).transpose(1, 0, 3, 4, 2, 5)
+    # (nq, B, Hkv, G, qb, D)
+    kb = k.reshape(B, nk, kv_block, Hkv, D).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nk, kv_block, Hkv, Dv).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_x):
+        qi, qx = qi_x
+        qx = qx.astype(jnp.float32)
+        q_pos = qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, ki_kv):
+            m_run, l_run, acc = carry
+            ki, kx, vx = ki_kv
+            k_pos = ki * kv_block + jnp.arange(kv_block)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qx,
+                           kx.astype(jnp.float32)) * scale
+            msk = _mask(mode, q_pos, k_pos, window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vx.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((B, Hkv, G, q_block), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hkv, G, q_block), jnp.float32),
+                jnp.zeros((B, Hkv, G, q_block, Dv), jnp.float32))
+        # remat the kv step: the (qb, kb) score/softmax blocks are recomputed
+        # in the backward instead of being saved per scan step (the O(S^2)
+        # memory this blockwise form exists to avoid)
+        if UNROLL_BLOCKWISE:
+            carry = init
+            for ki in range(nk):
+                carry, _ = jax.checkpoint(kv_step)(
+                    carry, (jnp.int32(ki), kb[ki], vb[ki]))
+            m_run, l_run, acc = carry
+        else:
+            (m_run, l_run, acc), _ = jax.lax.scan(
+                jax.checkpoint(kv_step), init, (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+        # cast per q-block: the stacked output accumulates in the compute
+        # dtype, halving the O(B*S*H*D) fp32 transient
+        return None, out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+    if UNROLL_BLOCKWISE:
+        ob = jnp.stack([q_step(None, (jnp.int32(qi), qb[qi]))[1]
+                        for qi in range(nq)])
+    else:
+        _, ob = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    # ob: (nq, B, qb, Hkv, G, Dv)
+    return (ob.transpose(1, 0, 2, 3, 4, 5)
+            .reshape(B, S, H, Dv))
+
+
+# Cost-model escape hatch: XLA's cost_analysis counts loop bodies once, so
+# the roofline benchmark forces the scan-free naive path (same matmul
+# semantics, fully unrolled HLO).
+FORCE_NAIVE = False
+
+
+def attention(q, k, v, mode="causal", window=0, blockwise_threshold=2048,
+              use_kernel=False):
+    if UNROLL_BLOCKWISE and q.shape[1] == k.shape[1] and q.shape[1] >= 1024:
+        return attention_blockwise(q, k, v, mode=mode, window=window)
+    if FORCE_NAIVE:
+        return attention_ref(q, k, v, mode=mode, window=window)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, mode=mode, window=window)
+    if q.shape[1] == k.shape[1] and q.shape[1] > blockwise_threshold:
+        return attention_blockwise(q, k, v, mode=mode, window=window)
+    return attention_ref(q, k, v, mode=mode, window=window)
+
+
+# ---------------------------------------------------------------------------
+# GQA module (fused linear_qkv, Megatron naming so paper annotations map 1:1)
+# ---------------------------------------------------------------------------
+
+def gqa_init(rng, cfg: ArchConfig, dtype, out_scale=None):
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    p = {
+        "linear_qkv": linear_init(k1, cfg.d_model, (H + 2 * Hkv) * D, dtype,
+                                  bias=cfg.qkv_bias),
+        "linear_proj": linear_init(k2, H * D, cfg.d_model, dtype,
+                                   scale=out_scale),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((D,), dtype)
+        p["k_norm"] = jnp.ones((D,), dtype)
+    return p
+
+
+def _gqa_qkv(p, cfg: ArchConfig, x, positions):
+    B, S, _ = x.shape
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    qkv = linear(p["linear_qkv"], x)
+    q, k, v = jnp.split(qkv, [H * D, (H + Hkv) * D], axis=-1)
+    q = q.reshape(B, S, H, D)
+    k = k.reshape(B, S, Hkv, D)
+    v = v.reshape(B, S, Hkv, D)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if cfg.attn != "none" and cfg.arch_type != "audio":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(p, cfg: ArchConfig, x, positions=None, ctx=None,
+                use_kernel=False):
+    ctx = ensure_ctx(ctx)
+    x = ctx.tap("input", x)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _gqa_qkv(p, cfg, x, positions)
+    mode = ("bidirectional" if not cfg.causal
+            else ("swa" if cfg.attn == "swa" else "causal"))
+    o = attention(q, k, v, mode=mode, window=cfg.window, use_kernel=use_kernel)
+    o = ctx.tap("core_attn_out", o.reshape(B, S, -1))
+    y = linear(p["linear_proj"], o)
+    return ctx.tap("output", y)
+
+
+# ---- decode (one token, KV cache) -----------------------------------------
+
+def gqa_init_cache(cfg: ArchConfig, batch, seq_len, dtype):
+    Hkv, D = cfg.n_kv_heads, cfg.d_head
+    L = seq_len if cfg.attn != "swa" else min(seq_len, cfg.window)
+    return {"k": jnp.zeros((batch, L, Hkv, D), dtype),
+            "v": jnp.zeros((batch, L, Hkv, D), dtype)}
+
+
+def gqa_decode(p, cfg: ArchConfig, x, cache, pos):
+    """x: (B,1,d_model); pos: scalar int32 (next position).  SWA caches are
+    ring buffers of size ``window``; softmax permutation-invariance makes the
+    slot order irrelevant once positions are encoded in the roped keys."""
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos, (B, 1))
+    q, k_new, v_new = _gqa_qkv(p, cfg, x, positions)
+    Lc = cache["k"].shape[1]
+    slot = pos % Lc
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    idx = jnp.arange(Lc)
+    if cfg.attn == "swa":
+        valid = (idx <= slot) | (pos >= Lc)      # ring buffer occupancy
+    else:
+        valid = idx <= pos
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    G = H // Hkv
+    qg = q.reshape(B, 1, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(D).astype(jnp.float32)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    pw = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", pw, v.astype(jnp.float32))
+    o = o.reshape(B, 1, H * D).astype(x.dtype)
+    y = linear(p["linear_proj"], o)
+    return y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def mla_init(rng, cfg: ArchConfig, dtype, out_scale=None):
+    m = cfg.mla
+    H = cfg.n_heads
+    ks = jax.random.split(rng, 8)
+    p = {}
+    dq = m.qk_nope_dim + m.qk_rope_dim
+    if m.q_lora_rank:
+        p["linear_dq"] = linear_init(ks[0], cfg.d_model, m.q_lora_rank, dtype)
+        p["q_lora_norm"] = jnp.ones((m.q_lora_rank,), dtype)
+        p["linear_uq"] = linear_init(ks[1], m.q_lora_rank, H * dq, dtype)
+    else:
+        p["linear_q"] = linear_init(ks[1], cfg.d_model, H * dq, dtype)
+    p["linear_dkv"] = linear_init(ks[2], cfg.d_model, m.kv_lora_rank, dtype)
+    p["kv_lora_norm"] = jnp.ones((m.kv_lora_rank,), dtype)
+    p["linear_krope"] = linear_init(ks[3], cfg.d_model, m.qk_rope_dim, dtype)
+    p["linear_uk"] = linear_init(ks[4], m.kv_lora_rank, H * m.qk_nope_dim, dtype)
+    p["linear_uv"] = linear_init(ks[5], m.kv_lora_rank, H * m.v_head_dim, dtype)
+    p["linear_proj"] = linear_init(ks[6], H * m.v_head_dim, cfg.d_model, dtype,
+                                   scale=out_scale)
+    return p
+
+
+def _mla_q(p, cfg, x, positions):
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    if m.q_lora_rank:
+        ql = rmsnorm(p["q_lora_norm"], linear(p["linear_dq"], x))
+        q = linear(p["linear_uq"], ql)
+    else:
+        q = linear(p["linear_q"], x)
+    q = q.reshape(B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p, cfg, x, positions):
+    m = cfg.mla
+    ckv = rmsnorm(p["kv_lora_norm"], linear(p["linear_dkv"], x))  # (B,S,r)
+    k_rope = linear(p["linear_krope"], x)                          # (B,S,dr)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return ckv, k_rope
+
+
+def mla_forward(p, cfg: ArchConfig, x, positions=None, ctx=None):
+    """Training/prefill path: materializes per-head K/V from the latent."""
+    ctx = ensure_ctx(ctx)
+    x = ctx.tap("input", x)
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    ckv, k_rope = _mla_ckv(p, cfg, x, positions)
+    k_nope = linear(p["linear_uk"], ckv).reshape(B, S, H, m.qk_nope_dim)
+    v = linear(p["linear_uv"], ckv).reshape(B, S, H, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, m.qk_rope_dim))], axis=-1)
+    o = attention(q, k, v, mode="causal")
+    o = ctx.tap("core_attn_out", o.reshape(B, S, -1))
+    y = linear(p["linear_proj"], o)
+    return ctx.tap("output", y)
+
+
+def mla_init_cache(cfg: ArchConfig, batch, seq_len, dtype):
+    m = cfg.mla
+    return {"ckv": jnp.zeros((batch, seq_len, m.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, seq_len, m.qk_rope_dim), dtype)}
+
+
+def mla_decode_naive(p, cfg: ArchConfig, x, cache, pos):
+    """Naive MLA decode: materializes per-head K/V from the latent cache and
+    runs standard attention.  Mathematically identical to ``mla_decode`` —
+    an independent implementation used as the inference-TTrace reference."""
+    m, H = cfg.mla, cfg.n_heads
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos, (B, 1))
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    ckv_new, krope_new = _mla_ckv(p, cfg, x, positions)
+    ckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, pos, 0))
+    krope = jax.lax.dynamic_update_slice(
+        cache["krope"], krope_new.astype(cache["krope"].dtype), (0, pos, 0))
+    B_, S = ckv.shape[0], ckv.shape[1]
+    k_nope = linear(p["linear_uk"], ckv).reshape(B_, S, H, m.qk_nope_dim)
+    v = linear(p["linear_uv"], ckv).reshape(B_, S, H, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                  (B_, S, H, m.qk_rope_dim))], axis=-1)
+    G = 1
+    s_ = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) / jnp.sqrt(
+        m.qk_nope_dim + m.qk_rope_dim).astype(jnp.float32)
+    valid = jnp.arange(S) <= pos
+    s_ = jnp.where(valid[None, None, None, :], s_, NEG_INF)
+    pw = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", pw, v.astype(jnp.float32))
+    o = o.reshape(B_, 1, H * m.v_head_dim).astype(x.dtype)
+    y = linear(p["linear_proj"], o)
+    return y, {"ckv": ckv, "krope": krope}
+
+
+# inference-TTrace switches (set per decode runner; trace-time globals)
+MLA_DECODE_IMPL = "absorbed"         # "absorbed" | "naive"
+MLA_DECODE_BUGS: frozenset = frozenset()
+
+
+def mla_decode(p, cfg, x, cache, pos):
+    """Dispatcher: absorbed (production) vs naive (independent reference)
+    MLA decode — the two sides of the inference differential test."""
+    if MLA_DECODE_IMPL == "naive":
+        return mla_decode_naive(p, cfg, x, cache, pos)
+    return mla_decode_absorbed(p, cfg, x, cache, pos,
+                               bugs=MLA_DECODE_BUGS)
+
+
+def mla_decode_absorbed(p, cfg: ArchConfig, x, cache, pos, bugs=frozenset()):
+    """Absorbed decode: attention runs in the kv_lora latent space, so the
+    cache stores only (kv_lora + rope_dim) per token — MLA's memory win.
+
+    ``decode_stale_rope_pos`` (serving-bug analogue of the paper's W-CP
+    class): the query rope uses a stale position counter (pos-1) — decoding
+    continues silently with slightly wrong attention geometry."""
+    m, H = cfg.mla, cfg.n_heads
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos, (B, 1))
+    qpos = (jnp.maximum(positions - 1, 0)
+            if "decode_stale_rope_pos" in bugs else positions)
+    q_nope, q_rope = _mla_q(p, cfg, x, qpos)               # (B,1,H,*)
+    ckv_new, krope_new = _mla_ckv(p, cfg, x, positions)
+    ckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, pos, 0))
+    krope = jax.lax.dynamic_update_slice(
+        cache["krope"], krope_new.astype(cache["krope"].dtype), (0, pos, 0))
+    S = ckv.shape[1]
+    wuk = p["linear_uk"]["w"].reshape(m.kv_lora_rank, H, m.qk_nope_dim)
+    # absorb W_uk into q:   q_lat[b,h,r] = sum_d q_nope[b,h,d] * wuk[r,h,d]
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    s = (jnp.einsum("bqhr,bkr->bhqk", q_lat, ckv.astype(jnp.float32))
+         + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                      krope.astype(jnp.float32)))
+    s = s / jnp.sqrt(m.qk_nope_dim + m.qk_rope_dim).astype(jnp.float32)
+    valid = jnp.arange(S) <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    pw = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhqk,bkr->bqhr", pw, ckv.astype(jnp.float32))
+    wuv = p["linear_uv"]["w"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    o = jnp.einsum("bqhr,rhd->bqhd", ctx_lat, wuv.astype(jnp.float32))
+    o = o.reshape(B, 1, H * m.v_head_dim).astype(x.dtype)
+    y = linear(p["linear_proj"], o)
+    return y, {"ckv": ckv, "krope": krope}

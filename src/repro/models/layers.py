@@ -1,0 +1,166 @@
+"""Reference building blocks: norms, RoPE, linears, MLPs, losses.
+
+These are the pure-jnp *single-device reference* implementations (the trusted
+side of TTrace's differential test).  Distributed candidates live in
+``repro/parallel`` (manual collectives) and ``repro/sharding`` (GSPMD rules).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tap import ensure_ctx
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, d_in, d_out, dtype, scale=None):
+    scale = 0.02 if scale is None else scale
+    return (scale * jax.random.normal(rng, (d_in, d_out), jnp.float32)).astype(dtype)
+
+
+def embed_init(rng, vocab, d_model, dtype):
+    return (0.02 * jax.random.normal(rng, (vocab, d_model), jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers
+# ---------------------------------------------------------------------------
+
+def rmsnorm(w, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def linear_init(rng, d_in, d_out, dtype, bias=False, scale=None):
+    p = {"w": dense_init(rng, d_in, d_out, dtype, scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def swiglu_mlp_init(rng, d_model, d_ff, dtype, out_scale=None):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "gate": linear_init(k1, d_model, d_ff, dtype),
+        "up": linear_init(k2, d_model, d_ff, dtype),
+        "down": linear_init(k3, d_ff, d_model, dtype, scale=out_scale),
+    }
+
+
+def swiglu_mlp(p, x, ctx=None):
+    ctx = ensure_ctx(ctx)
+    x = ctx.tap("input", x)
+    h = jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x)
+    y = linear(p["down"], h)
+    return ctx.tap("output", y)
+
+
+def gelu_mlp_init(rng, d_model, d_ff, dtype, out_scale=None):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "fc1": linear_init(k1, d_model, d_ff, dtype, bias=True),
+        "fc2": linear_init(k2, d_ff, d_model, dtype, bias=True, scale=out_scale),
+    }
+
+
+def gelu_mlp(p, x, ctx=None):
+    ctx = ensure_ctx(ctx)
+    x = ctx.tap("input", x)
+    h = jax.nn.gelu(linear(p["fc1"], x))
+    y = linear(p["fc2"], h)
+    return ctx.tap("output", y)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (np.arange(0, d, 2, dtype=np.float32) / d))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    if x.ndim == angles.ndim + 1:          # (..., S, H, D): broadcast over H
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    dt = x.dtype
+    x1, x2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean next-token CE.  logits: (B,S,V) any float; labels: (B,S) int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_cross_entropy(h, embed, labels, mask=None, chunk=512,
+                          scale=None):
+    """CE computed from hidden states without materializing (B,S,V) logits.
+
+    ``h``: (B,S,D) final hidden states; ``embed``: (V,D) output embedding.
+    Scans over sequence chunks so peak memory is O(B*chunk*V).  Used by the
+    big dry-run configs where the full logit tensor would dominate HBM.
+    """
+    B, S, D = h.shape
+    if S % chunk != 0:
+        return cross_entropy(_logits(h, embed, scale), labels, mask)
+    n = S // chunk
+    hc = h.reshape(B, n, chunk, D).swapaxes(0, 1)           # (n,B,c,D)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)         # (n,B,c)
+    mc = (mask.reshape(B, n, chunk).swapaxes(0, 1).astype(jnp.float32)
+          if mask is not None else jnp.ones((n, B, chunk), jnp.float32))
+
+    def body(carry, xs):
+        hs, ls, ms = xs
+        logits = _logits(hs, embed, scale).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        nll = jnp.sum((lse - gold) * ms)
+        tot, cnt = carry
+        return (tot + nll, cnt + jnp.sum(ms)), None
+
+    # remat: recompute each chunk's logits in the backward pass rather than
+    # saving (B, chunk, V) per scan step
+    (tot, cnt), _ = jax.lax.scan(jax.checkpoint(body),
+                                 (jnp.zeros(()), jnp.zeros(())),
+                                 (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _logits(h, embed, scale=None):
+    logits = h @ embed.T.astype(h.dtype)
+    if scale is not None:
+        logits = logits * scale
+    return logits

@@ -1,0 +1,162 @@
+"""Mixture-of-Experts: top-k router + capacity-based expert dispatch.
+
+Dispatch uses the sort-based capacity layout (the TPU-idiomatic equivalent of
+Megatron's token dropper): token-expert assignments are sorted by expert id,
+each expert processes a fixed-capacity (E, C, d) buffer via one batched
+matmul, and overflow tokens are dropped (capacity_factor controls C).  FLOPs
+therefore match the true MoE cost E*C*d*f ~= T*topk*cf*d*f instead of the
+T*(E*C)*d quadratic cost of one-hot dispatch einsums.
+
+Router logits/probs are tapped (paper bug #6 — router weights not synchronized
+— surfaces exactly here).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.tap import ensure_ctx
+from repro.models.layers import linear_init, swiglu_mlp_init, dense_init
+
+
+def moe_init(rng, cfg: ArchConfig, dtype, out_scale=None):
+    m = cfg.moe
+    ks = jax.random.split(rng, 5)
+    E, d, f = m.n_experts, cfg.d_model, m.d_ff_expert
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),    # fp32 router
+        "experts": {
+            "gate": (0.02 * jax.random.normal(ks[1], (E, d, f), jnp.float32)
+                     ).astype(dtype),
+            "up": (0.02 * jax.random.normal(ks[2], (E, d, f), jnp.float32)
+                   ).astype(dtype),
+            "down": ((out_scale or 0.02)
+                     * jax.random.normal(ks[3], (E, f, d), jnp.float32)
+                     ).astype(dtype),
+        },
+    }
+    if m.n_shared:
+        p["shared"] = swiglu_mlp_init(ks[4], d, m.n_shared * f, dtype,
+                                      out_scale=out_scale)
+    return p
+
+
+def router_topk(logits, top_k):
+    """fp32 softmax-then-topk with renormalization.  logits: (T, E)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, top_k)                 # (T,k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    return top_p, top_e
+
+
+def load_balance_loss(probs_mean, assigned_frac, n_experts):
+    """Switch-style aux loss: E * sum_e f_e * P_e."""
+    return n_experts * jnp.sum(probs_mean * assigned_frac)
+
+
+def expert_capacity(n_tokens: int, m) -> int:
+    """Per-expert buffer size; capacity_factor <= 0 means dropless.
+    Rounded up to a multiple of 512 so the capacity dim of the (E, C, d)
+    dispatch buffer stays divisible by the dp mesh axes (shardable) and
+    MXU-tile aligned."""
+    if m.capacity_factor <= 0:
+        return n_tokens
+    cap = int(max(1, m.capacity_factor * n_tokens * m.top_k / m.n_experts))
+    if cap > 512:
+        cap = -(-cap // 512) * 512
+    return cap
+
+
+def _dispatch_one_group(xt, top_p, top_e, n_experts, top_k, cap, experts,
+                        dtype, flat_constraints=False):
+    """Capacity dispatch + expert compute + combine for ONE token group.
+    All indices are group-local, so under vmap with the group dim sharded
+    over the data axes nothing ever gathers across devices.
+
+    ``flat_constraints`` is OFF for both paths after measurement: for the
+    ungrouped (non-EP) path the best-known layout is the (E, C/data, d)
+    buffer with free flat tensors (60 GiB on mixtral train vs 98 with flat
+    sharding: the buf<->flat resharding costs more than it saves, §Perf)."""
+    from repro.sharding.rules import constrain
+    cf = (lambda t: constrain(t, "flat_tokens")) if flat_constraints \
+        else (lambda t: t)
+    T, d = xt.shape
+    k = top_k
+    flat_e = top_e.reshape(T * k)
+    flat_w = top_p.reshape(T * k)
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, sw, stok = flat_e[order], flat_w[order], flat_tok[order]
+    start = jnp.searchsorted(se, jnp.arange(n_experts), side="left")
+    pos = jnp.arange(T * k) - start[se]
+    keep = pos < cap
+
+    src = cf(jnp.where(keep[:, None], xt[stok], 0.0).astype(dtype))
+    buf = jnp.zeros((n_experts, cap, d), dtype)
+    buf = buf.at[jnp.where(keep, se, 0), jnp.where(keep, pos, 0)].add(src)
+    buf = constrain(buf, "moe_buf" if flat_constraints is None else
+                    "vmapped_buf")
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf,
+                                experts["gate"].astype(dtype)))
+         * jnp.einsum("ecd,edf->ecf", buf, experts["up"].astype(dtype)))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, experts["down"].astype(dtype))
+    gathered = cf(out_buf[jnp.where(keep, se, 0), jnp.where(keep, pos, 0)])
+    contrib = cf(jnp.where(keep[:, None],
+                           gathered.astype(jnp.float32) * sw[:, None], 0.0))
+    yt = cf(jnp.zeros((T, d), jnp.float32).at[stok].add(contrib))
+    return yt
+
+
+def moe_forward(p, cfg: ArchConfig, x, ctx=None):
+    """x: (B,S,d).  Returns (y, aux_loss).
+
+    Dispatch runs per token-GROUP (one group per data shard when a sharding
+    context is active): capacities, sorts and scatter/gather indices are
+    group-local, so GSPMD shards the (G, E, C, d) buffer on (data, model)
+    and never replicates the (T*k, d) combine — the deepseek-prefill memory
+    cliff documented in EXPERIMENTS.md §Perf."""
+    from repro.sharding import rules as shrules
+    ctx = ensure_ctx(ctx)
+    x = ctx.tap("input", x)
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = xt.astype(jnp.float32) @ p["router"]              # (T,E) fp32
+    logits = ctx.tap("router_logits",
+                     logits.reshape(B, S, -1)).reshape(T, -1)
+    top_p, top_e = router_topk(logits, m.top_k)
+
+    # aux loss statistics (global)
+    probs = jax.nn.softmax(logits, axis=-1)
+    assigned = jnp.zeros((m.n_experts,), jnp.float32).at[top_e.reshape(-1)].add(1.0)
+    aux = load_balance_loss(probs.mean(0), assigned / (T * m.top_k),
+                            m.n_experts) * m.router_aux_coef
+
+    # ---- grouped capacity dispatch ------------------------------------------
+    G = shrules.dispatch_groups(T, m.n_experts)
+    Tg = T // G
+    cap = expert_capacity(Tg, m)
+    if G == 1:
+        # non-EP path: (E, C/data, d) buffer, unconstrained flat tensors
+        yt = _dispatch_one_group(xt, top_p, top_e, m.n_experts, m.top_k,
+                                 cap, p["experts"], x.dtype,
+                                 flat_constraints=None)[None]
+    else:
+        disp = jax.vmap(_dispatch_one_group,
+                        in_axes=(0, 0, 0, None, None, None, None, None))
+        cg = lambda t: shrules.constrain(t, "grouped")
+        yt = disp(cg(xt.reshape(G, Tg, d)),
+                  cg(top_p.reshape(G, Tg, m.top_k)),
+                  cg(top_e.reshape(G, Tg, m.top_k)), m.n_experts, m.top_k,
+                  cap, p["experts"], x.dtype)
+        yt = shrules.constrain(yt, "grouped")
+    y = yt.reshape(B, S, d).astype(x.dtype)
+
+    if m.n_shared:
+        from repro.models.layers import swiglu_mlp
+        y = y + swiglu_mlp(p["shared"], x)
+    y = ctx.tap("output", y)
+    return y, aux

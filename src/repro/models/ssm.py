@@ -1,0 +1,365 @@
+"""SSM / linear-attention blocks: Mamba2 (SSD) and RWKV-6 "Finch".
+
+Both are instances of a gated linear-attention recurrence over per-head state
+S in R^{dk x dv}:
+
+    S_t = diag(w_t) . S_{t-1} + k_t v_t^T
+    y_t = q_t . S_t                         (mamba2 convention), or
+    y_t = q_t . (S_{t-1} + diag(u) k_t v_t^T)   (rwkv6 convention)
+
+Mamba2 uses a scalar per-head decay (w_t = exp(-exp(A_log) * dt_t)); RWKV-6
+uses a data-dependent per-channel decay (Finch).  We implement
+
+* ``lin_attn_recurrent`` — step-by-step lax.scan; the numerical oracle and the
+  decode path (one step per token);
+* ``lin_attn_chunked``   — chunked parallel form (GLA-style): O(S/C) sequential
+  steps of dense matmuls, the training/prefill path and the contract for the
+  Pallas kernel (repro/kernels/ssm_scan).  Intra-chunk decays are factorized
+  as (q*exp(L)) @ (k*exp(-L))^T with L clamped at -CLAMP, the standard "safe
+  gate" trick (cf. flash-linear-attention); the clamp only touches channels
+  already decayed to ~exp(-20).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.tap import ensure_ctx
+from repro.models.layers import linear, linear_init, dense_init, rmsnorm
+
+CLAMP = 20.0
+
+# benchmarks/roofline sets this: run the chunk recurrence as an unrolled
+# python loop so XLA's cost analysis (which counts loop bodies once) sees
+# every chunk of the production-size chunked scan.
+UNROLL_SCAN = False
+
+
+# ---------------------------------------------------------------------------
+# Generic decayed linear attention
+# ---------------------------------------------------------------------------
+
+def lin_attn_recurrent(q, k, v, log_w, u=None, s0=None):
+    """q,k:(B,S,H,dk) v:(B,S,H,dv) log_w:(B,S,H,dk) (log decay, <=0).
+
+    Returns y:(B,S,H,dv), s_final:(B,H,dk,dv).  ``u``:(H,dk) switches to the
+    rwkv convention (bonus on the current token, decay applied after read)."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+
+    def step(s, xs):
+        qt, kt, vt, lwt = xs  # (B,H,dk) etc
+        wt = jnp.exp(lwt.astype(jnp.float32))[..., None]       # (B,H,dk,1)
+        kv = kt.astype(jnp.float32)[..., None] * vt.astype(jnp.float32)[..., None, :]
+        if u is None:
+            s = wt * s + kv
+            y = jnp.einsum("bhk,bhkv->bhv", qt.astype(jnp.float32), s)
+        else:
+            y = jnp.einsum("bhk,bhkv->bhv", qt.astype(jnp.float32),
+                           s + u.astype(jnp.float32)[None, :, :, None] * kv)
+            s = wt * s + kv
+        return s, y
+
+    xs = tuple(x.swapaxes(0, 1) for x in (q, k, v, log_w))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1).astype(v.dtype), s_fin
+
+
+def lin_attn_chunked(q, k, v, log_w, chunk=128, u=None, s0=None):
+    """Chunked parallel form; same contract as ``lin_attn_recurrent``.
+
+    ``log_w`` may be (B,S,H,dk) (per-channel decay, rwkv6) or (B,S,H,1)
+    (scalar per-head decay, mamba2).  The scalar case uses the exact
+    exp(L_t - L_s) relative-decay matrix (SSD "segsum" form) — no clamping;
+    the per-channel case uses the clamped "safe gate" factorization, exact
+    whenever per-chunk cumulative decay stays above -CLAMP (true for RWKV-6's
+    bounded decays)."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    scalar = log_w.shape[-1] == 1
+    if S % chunk != 0:
+        return lin_attn_recurrent(q, k, v, log_w, u=u, s0=s0)
+    n = S // chunk
+    if s0 is None:
+        s0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+
+    def split(x):  # (B,S,H,*) -> (n,B,H,C,*)
+        return x.reshape(B, n, chunk, H, -1).transpose(1, 0, 3, 2, 4)
+
+    qs, ks, vs, lws = (split(x).astype(jnp.float32) for x in (q, k, v, log_w))
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool),
+                      0 if u is None else -1)
+
+    def body(s, xs):
+        qc, kc, vc, lw = xs                       # (B,H,C,dk|dv)
+        L = jnp.cumsum(lw, axis=2)                # inclusive log-decay
+        Lq = L if u is None else L - lw           # rwkv reads S_{t-1}
+        q_t = qc * jnp.exp(Lq)
+        if scalar:
+            # exact relative decay exp(Lq_t - L_s), scalar per head
+            D = jnp.exp(jnp.clip(Lq[..., 0][..., :, None]
+                                 - L[..., 0][..., None, :], None, 0.0))
+            A = jnp.einsum("bhtk,bhsk->bhts", qc, kc) * D
+        else:
+            k_t = kc * jnp.exp(-jnp.maximum(L, -CLAMP))
+            A = jnp.einsum("bhtk,bhsk->bhts", q_t, k_t)
+        A = jnp.where(causal[None, None], A, 0.0)
+        y = jnp.einsum("bhts,bhsv->bhtv", A, vc)          # intra-chunk
+        y += jnp.einsum("bhtk,bhkv->bhtv", q_t, s)        # inter-chunk
+        # (rwkv current-token bonus is added outside the scan)
+        # state update: S' = exp(L_C) . S + sum_s exp(L_C - L_s) k_s v_s^T
+        Lc = L[:, :, -1:, :]                               # (B,H,1,dk)
+        k_dec = kc * jnp.exp(Lc - L)
+        s = jnp.exp(Lc[:, :, 0, :, None]) * s + jnp.einsum(
+            "bhsk,bhsv->bhkv", k_dec, vc)
+        return s, y
+
+    # rwkv bonus handled separately (cleaner than inside the scan body);
+    # remat the chunk body so (C,C) decay/score blocks are recomputed in the
+    # backward instead of saved per chunk
+    if UNROLL_SCAN:
+        s_acc, ys_l = s0, []
+        for i in range(n):
+            s_acc, yi = body(s_acc, (qs[i], ks[i], vs[i], lws[i]))
+            ys_l.append(yi)
+        s_fin, ys = s_acc, jnp.stack(ys_l)
+    else:
+        s_fin, ys = jax.lax.scan(jax.checkpoint(body), s0,
+                                 (qs, ks, vs, lws))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, H, dv)
+    if u is not None:
+        bonus = jnp.einsum("bshk,hk,bshk->bsh", q.astype(jnp.float32),
+                           u.astype(jnp.float32), k.astype(jnp.float32))
+        y = y + bonus[..., None] * v.astype(jnp.float32)
+    return y.astype(v.dtype), s_fin
+
+
+def lin_attn(q, k, v, log_w, chunk=128, u=None, s0=None, chunked=True):
+    if chunked:
+        return lin_attn_chunked(q, k, v, log_w, chunk=chunk, u=u, s0=s0)
+    return lin_attn_recurrent(q, k, v, log_w, u=u, s0=s0)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (SSD)
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.d_head
+    conv_dim = d_inner + 2 * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def mamba2_init(rng, cfg: ArchConfig, dtype, out_scale=None):
+    s = cfg.ssm
+    d_inner, H, conv_dim = mamba2_dims(cfg)
+    ks = jax.random.split(rng, 4)
+    proj_dim = 2 * d_inner + 2 * s.d_state + H   # z, x, B, C, dt
+    return {
+        "in_proj": linear_init(ks[0], cfg.d_model, proj_dim, dtype),
+        "conv_w": dense_init(ks[1], s.conv_kernel, conv_dim, dtype, scale=0.2),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),           # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm": jnp.ones((d_inner,), dtype),
+        "out_proj": linear_init(ks[2], d_inner, cfg.d_model, dtype,
+                                scale=out_scale),
+    }
+
+
+def _causal_conv(w, b, x, state=None):
+    """Depthwise causal conv1d.  x:(B,S,C), w:(K,C).  ``state``:(B,K-1,C) are
+    the trailing inputs from the previous segment (decode)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return y + b.astype(x.dtype), new_state
+
+
+def mamba2_forward(p, cfg: ArchConfig, x, ctx=None, state=None, chunked=True):
+    """x:(B,S,d_model).  ``state``: dict(conv, ssm) for decode continuation.
+    Returns (y, new_state)."""
+    ctx = ensure_ctx(ctx)
+    x = ctx.tap("input", x)
+    s = cfg.ssm
+    d_inner, H, conv_dim = mamba2_dims(cfg)
+    B, S, _ = x.shape
+    zxbcdt = linear(p["in_proj"], x)
+    z, xin, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + s.d_state,
+                 2 * d_inner + 2 * s.d_state], axis=-1)
+    # depthwise conv applied per segment: convolving xin/B/C separately is
+    # identical to conv(concat(...)) but keeps the (model-)sharded xin
+    # sharded — the concat with the replicated B/C otherwise forces a
+    # full all-gather of xin every block (EXPERIMENTS.md §Perf, zamba2)
+    conv_state = None if state is None else state["conv"]
+    outs, new_states = [], []
+    off = 0
+    for seg_x in (xin, Bm, Cm):
+        wseg = p["conv_w"][:, off:off + seg_x.shape[-1]]
+        bseg = p["conv_b"][off:off + seg_x.shape[-1]]
+        st_seg = (None if conv_state is None
+                  else conv_state[..., off:off + seg_x.shape[-1]])
+        o, ns = _causal_conv(wseg, bseg, seg_x, st_seg)
+        outs.append(jax.nn.silu(o))
+        new_states.append(ns)
+        off += seg_x.shape[-1]
+    xin, Bm, Cm = outs
+    new_conv = (None if new_states[0] is None
+                else jnp.concatenate(new_states, axis=-1))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B,S,H)
+    a = -jnp.exp(p["A_log"])                                         # (H,)
+    log_w = (dt * a)[..., None]                                      # (B,S,H,1)
+
+    xh = xin.reshape(B, S, H, s.d_head)
+    v = xh.astype(jnp.float32) * dt[..., None]                       # dt * x
+    q = jnp.broadcast_to(Cm[:, :, None, :], (B, S, H, s.d_state))
+    k = jnp.broadcast_to(Bm[:, :, None, :], (B, S, H, s.d_state))
+
+    ssm_state = None if state is None else state["ssm"]
+    # scalar per-head decay: (B,S,H,1) selects the exact SSD segsum path
+    y, new_ssm = lin_attn(q, k, v.astype(x.dtype), log_w,
+                          chunk=s.chunk, s0=ssm_state, chunked=chunked)
+    y = y.astype(jnp.float32) + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z))
+    out = linear(p["out_proj"], y)
+    out = ctx.tap("output", out)
+    new_state = {"conv": new_conv, "ssm": new_ssm}
+    return out, new_state
+
+
+def mamba2_init_state(cfg: ArchConfig, batch, dtype):
+    s = cfg.ssm
+    d_inner, H, conv_dim = mamba2_dims(cfg)
+    return {"conv": jnp.zeros((batch, s.conv_kernel - 1, conv_dim), dtype),
+            "ssm": jnp.zeros((batch, H, s.d_state, s.d_head), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 block (time-mix + channel-mix)
+# ---------------------------------------------------------------------------
+
+def rwkv6_init(rng, cfg: ArchConfig, dtype, out_scale=None):
+    s = cfg.ssm
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = s.d_head
+    ks = jax.random.split(rng, 12)
+    tm = {
+        "mu_x": 0.5 * jnp.ones((d,), jnp.float32),
+        # data-dependent token-shift mixing (Finch): 5 targets r,k,v,w,g
+        "mix_A": dense_init(ks[0], d, 5 * s.mix_lora, dtype),
+        "mix_B": (0.02 * jax.random.normal(ks[1], (5, s.mix_lora, d),
+                                           jnp.float32)).astype(dtype),
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),
+        "recept": linear_init(ks[2], d, H * dh, dtype),
+        "key": linear_init(ks[3], d, H * dh, dtype),
+        "value": linear_init(ks[4], d, H * dh, dtype),
+        "gate": linear_init(ks[5], d, H * dh, dtype),
+        # data-dependent decay (Finch): w = exp(-exp(w0 + lora(x)))
+        "w0": -6.0 + jnp.zeros((H * dh,), jnp.float32),
+        "decay_A": dense_init(ks[6], d, s.decay_lora, dtype),
+        "decay_B": dense_init(ks[7], s.decay_lora, H * dh, dtype),
+        "u": 0.5 * jnp.ones((H, dh), jnp.float32),   # current-token bonus
+        "ln_out": jnp.ones((H * dh,), dtype),
+        "out": linear_init(ks[8], H * dh, d, dtype, scale=out_scale),
+    }
+    cm = {
+        "mu_k": 0.5 * jnp.ones((d,), jnp.float32),
+        "mu_r": 0.5 * jnp.ones((d,), jnp.float32),
+        "key": linear_init(ks[9], d, cfg.d_ff, dtype),
+        "value": linear_init(ks[10], cfg.d_ff, d, dtype, scale=out_scale),
+        "recept": linear_init(ks[11], d, d, dtype),
+    }
+    return {"time_mix": tm, "channel_mix": cm}
+
+
+def _token_shift(x, last):
+    """last:(B,1,d) trailing token of the previous segment (or zeros)."""
+    return jnp.concatenate([last.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def rwkv6_time_mix(p, cfg: ArchConfig, x, ctx=None, state=None, chunked=True):
+    ctx = ensure_ctx(ctx)
+    x = ctx.tap("input", x)
+    s = cfg.ssm
+    H, dh = cfg.n_heads, s.d_head
+    B, S, d = x.shape
+    last = (jnp.zeros((B, 1, d), x.dtype) if state is None
+            else state["shift"])
+    xprev = _token_shift(x, last)
+    xx = xprev - x
+    xxx = x + xx * p["mu_x"].astype(x.dtype)
+    dmix = jnp.tanh(linear({"w": p["mix_A"]}, xxx))
+    dmix = dmix.reshape(B, S, 5, s.mix_lora)
+    dmix = jnp.einsum("bsfm,fmd->bsfd", dmix.astype(jnp.float32),
+                      p["mix_B"].astype(jnp.float32))
+    mixes = p["mu"][None, None] + dmix                      # (B,S,5,d)
+    xr, xk, xv, xw, xg = [
+        (x + xx * mixes[:, :, i].astype(x.dtype)) for i in range(5)]
+
+    r = linear(p["recept"], xr).reshape(B, S, H, dh)
+    k = linear(p["key"], xk).reshape(B, S, H, dh)
+    v = linear(p["value"], xv).reshape(B, S, H, dh)
+    g = linear(p["gate"], xg)
+    dlora = jnp.tanh(linear({"w": p["decay_A"]}, xw))
+    dw = linear({"w": p["decay_B"]}, dlora).astype(jnp.float32)
+    log_w = -jnp.exp(p["w0"][None, None] + dw)              # (B,S,H*dh) <= 0
+    log_w = log_w.reshape(B, S, H, dh)
+
+    ssm_state = None if state is None else state["ssm"]
+    y, new_ssm = lin_attn(r, k, v, log_w, chunk=s.chunk, u=p["u"],
+                          s0=ssm_state, chunked=chunked)
+    y = y.reshape(B, S, H * dh)
+    # per-head group norm
+    yh = y.astype(jnp.float32).reshape(B, S, H, dh)
+    yh = (yh - yh.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        yh.var(-1, keepdims=True) + 1e-5)
+    y = (yh.reshape(B, S, H * dh) * p["ln_out"].astype(jnp.float32))
+    y = (y * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    out = linear(p["out"], y)
+    out = ctx.tap("output", out)
+    new_state = {"shift": x[:, -1:], "ssm": new_ssm}
+    return out, new_state
+
+
+def rwkv6_channel_mix(p, cfg: ArchConfig, x, ctx=None, state=None):
+    ctx = ensure_ctx(ctx)
+    x = ctx.tap("input", x)
+    B, S, d = x.shape
+    last = (jnp.zeros((B, 1, d), x.dtype) if state is None
+            else state["shift"])
+    xprev = _token_shift(x, last)
+    xx = xprev - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(linear(p["key"], xk)))
+    kv = linear(p["value"], k)
+    out = jax.nn.sigmoid(linear(p["recept"], xr).astype(jnp.float32)
+                         ).astype(x.dtype) * kv
+    out = ctx.tap("output", out)
+    return out, {"shift": x[:, -1:]}
+
+
+def rwkv6_init_state(cfg: ArchConfig, batch, dtype):
+    s = cfg.ssm
+    H, dh = cfg.n_heads, s.d_head
+    d = cfg.d_model
+    return {
+        "time_mix": {"shift": jnp.zeros((batch, 1, d), dtype),
+                     "ssm": jnp.zeros((batch, H, dh, dh), jnp.float32)},
+        "channel_mix": {"shift": jnp.zeros((batch, 1, d), dtype)},
+    }

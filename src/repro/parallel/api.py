@@ -1,0 +1,462 @@
+"""Candidate-runner builder: shard_map plumbing for the distributed GPT.
+
+``make_candidate_runner`` turns (ArchConfig, ParallelConfig, reference
+params) into a ``runner(batch, rewrites) -> Trace`` with the SAME canonical
+tap names as the single-device reference — the distributed half of TTrace's
+differential test.
+
+Plumbing responsibilities:
+  * build the ("dp","cp","tp") mesh and shard params/batch/probes per the
+    generated annotations (the programmatic equivalent of the paper's Fig 2
+    user annotations);
+  * zigzag-permute sequence-dim inputs for context parallelism and
+    un-permute collected taps back to logical order (paper Fig 6 layout);
+  * two-phase tap discovery (shard_map needs out_specs before tracing);
+  * post-backward gradient reductions over dp/cp/tp per tensor — the
+    bug-injection site for the loss-scaling and missing-all-reduce bugs;
+  * the optimizer step (plain AdamW or ZeRO-1) with main-grad and post-step
+    parameter tracing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.annotations import Annotations, ShardSpec
+from repro.core.collector import Trace, flatten_named, unflatten_named
+from repro.core.tap import TraceContext
+from repro.parallel.gpt import parallel_gpt_loss
+from repro.parallel.layers import permute_from_zigzag, permute_to_zigzag
+from repro.parallel.zero import zero1_update
+
+MESH_AXES = {"dp": "dp", "cp": "cp", "tp": "tp", "sp": "tp"}
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    dp: int = 1
+    cp: int = 1
+    tp: int = 1
+    sp: bool = False
+    zero1: bool = False
+    bugs: frozenset = frozenset()
+
+    @property
+    def n_devices(self):
+        return self.dp * self.cp * self.tp
+
+    @property
+    def features(self) -> set:
+        f = set()
+        if self.dp > 1: f.add("dp")
+        if self.cp > 1: f.add("cp")
+        if self.tp > 1: f.add("tp")
+        if self.sp: f.add("sp")
+        if self.zero1: f.add("zero1")
+        return f
+
+
+def make_device_mesh(pcfg: ParallelConfig) -> Mesh:
+    n = pcfg.n_devices
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devs)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    arr = np.array(devs[:n]).reshape(pcfg.dp, pcfg.cp, pcfg.tp)
+    return Mesh(arr, ("dp", "cp", "tp"))
+
+
+# ---------------------------------------------------------------------------
+# Annotation generation (what a user would write by hand, paper Fig 2)
+# ---------------------------------------------------------------------------
+
+def build_annotations(cfg: ArchConfig, pcfg: ParallelConfig) -> Annotations:
+    sp = pcfg.sp
+    cp = pcfg.cp > 1
+    seqspec = dict(cp_dim=1 if cp else None, cp_mode="zigzag",
+                   sp_dim=1 if sp else None, dp_dim=0)
+    params = {
+        "embedding.word_embeddings": {"tp_dim": 0},
+        "lm_head": {"tp_dim": 0},
+        "layers.*.self_attention.linear_qkv.w": {"tp_dim": 1},
+        "layers.*.self_attention.linear_qkv.b": {"tp_dim": 0},
+        "layers.*.self_attention.linear_proj.w": {"tp_dim": 0},
+        "layers.*.mlp.gate.w": {"tp_dim": 1},
+        "layers.*.mlp.up.w": {"tp_dim": 1},
+        "layers.*.mlp.down.w": {"tp_dim": 0},
+        "layers.*.mlp.experts.gate": {"tp_dim": 0},   # expert dim
+        "layers.*.mlp.experts.up": {"tp_dim": 0},
+        "layers.*.mlp.experts.down": {"tp_dim": 0},
+    }
+    acts = {
+        "embedding/output": seqspec,
+        "layers.*.self_attention/input": seqspec,
+        "layers.*.self_attention/core_attn_out":
+            {"tp_dim": -1, "cp_dim": 1 if cp else None, "cp_mode": "zigzag",
+             "dp_dim": 0},
+        "layers.*.self_attention/output": seqspec,
+        "layers.*.mlp/input": seqspec,
+        "layers.*.mlp/output": seqspec,
+        "layers.*.mlp/router_logits":
+            {"cp_dim": 1 if cp else None, "cp_mode": "zigzag", "dp_dim": 0},
+        "final_norm_out": seqspec,
+    }
+    return Annotations.from_dict({"params": params, "acts": acts})
+
+
+def spec_to_pspec(spec: ShardSpec, ndim: int, pcfg: ParallelConfig) -> P:
+    """ShardSpec -> PartitionSpec on the ("dp","cp","tp") mesh."""
+    dims: dict[int, list[str]] = {}
+
+    def add(axis, mesh_axis, active):
+        d = spec.dim_for(axis)
+        if d is None or not active:
+            return
+        dims.setdefault(d % ndim, []).append(mesh_axis)
+
+    # outer-to-inner order must match annotations.AXES: dp, ep, cp, tp, sp
+    add("dp", "dp", pcfg.dp > 1)
+    add("ep", "tp", pcfg.tp > 1)
+    add("cp", "cp", pcfg.cp > 1)
+    add("tp", "tp", pcfg.tp > 1)
+    add("sp", "tp", pcfg.sp)
+    entries = []
+    for i in range(ndim):
+        ax = dims.get(i, [])
+        entries.append(None if not ax else (ax[0] if len(ax) == 1
+                                            else tuple(ax)))
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def sizes_coords(pcfg: ParallelConfig):
+    return {"dp": pcfg.dp, "cp": pcfg.cp, "tp": pcfg.tp,
+            "sp": pcfg.tp if pcfg.sp else 1}
+
+
+# ---------------------------------------------------------------------------
+# Gradient reduction rules (the bug surface)
+# ---------------------------------------------------------------------------
+
+def _needs_tp_reduce(name: str, pcfg: ParallelConfig) -> bool:
+    if name.endswith("q_norm") or name.endswith("k_norm"):
+        return pcfg.tp > 1          # head-sharded compute, always partial
+    if name.endswith("router"):
+        # expert-parallel: each rank backprops only its local experts'
+        # combine weights into the (replicated) router — the grads are
+        # partial and must be all-reduced over the EP (= tp) group.  This is
+        # the sync Megatron's bug 6 family is about.
+        return pcfg.tp > 1
+    norm_like = name.endswith(("input_norm", "post_attn_norm", "final_norm"))
+    return pcfg.sp and pcfg.tp > 1 and norm_like
+
+
+def reduce_param_grads(pg_named: dict, pcfg: ParallelConfig, bugs):
+    out = {}
+    for name, g in pg_named.items():
+        if pcfg.dp > 1:
+            g = jax.lax.psum(g, "dp")
+            if "dp_wrong_loss_scale" not in bugs:
+                g = g / pcfg.dp
+        if pcfg.cp > 1:
+            skip_cp = ("tp_cp_wrong_norm_grad" in bugs
+                       and name.endswith("input_norm") and pcfg.tp > 1)
+            if skip_cp:
+                from repro.parallel.layers import one_rank
+                g = one_rank(g, "cp")   # per-rank partial, silently wrong
+            else:
+                g = jax.lax.psum(g, "cp")
+                if "cp_wrong_loss_scale" not in bugs:
+                    g = g / pcfg.cp
+        if _needs_tp_reduce(name, pcfg):
+            skip = (("sp_layernorm_not_synced" in bugs
+                     and name.endswith("post_attn_norm"))
+                    or ("tp_missing_grad_allreduce" in bugs
+                        and name.endswith("input_norm")))
+            if skip:
+                from repro.parallel.layers import one_rank
+                g = one_rank(g, "tp")   # per-rank partial, silently wrong
+            else:
+                g = jax.lax.psum(g, "tp")
+        out[name] = g
+    return out
+
+
+def reduce_act_grads(ag: dict, ann: Annotations, pcfg: ParallelConfig, bugs):
+    """Activation-gradient (probe) scaling.  The tp accumulation is already
+    handled by the f/g conjugate operators inside the layers; what remains is
+    the dp/cp loss averaging — the same scale factors whose bugs (3, 4) the
+    paper catalogues."""
+    out = {}
+    for name, g in ag.items():
+        if pcfg.tp > 1 and name.endswith("router_logits"):
+            # dispatch + (tp-partialized) aux contributions sum over tp
+            g = jax.lax.psum(g, "tp")
+        if pcfg.dp > 1 and "dp_wrong_loss_scale" not in bugs:
+            g = g / pcfg.dp
+        if pcfg.cp > 1 and "cp_wrong_loss_scale" not in bugs:
+            g = g / pcfg.cp
+        out[name] = g
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+def qkv_permutation(cfg: ArchConfig, tp: int) -> np.ndarray:
+    """Column permutation mapping the reference fused-QKV layout [Q|K|V] to
+    the tensor-parallel layout [q_0|k_0|v_0 | q_1|k_1|v_1 | ...] so that a
+    contiguous tp shard holds its own heads' q, k and v.
+
+    This is the paper's "mapping of semantics" problem in miniature: the
+    candidate framework stores the same logical parameter in a different
+    physical layout, and the tensor canonical mapping must undo it."""
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = np.arange(H * D).reshape(tp, -1)
+    k = H * D + np.arange(Hkv * D).reshape(tp, -1)
+    v = (H + Hkv) * D + np.arange(Hkv * D).reshape(tp, -1)
+    return np.concatenate([np.concatenate([q[r], k[r], v[r]])
+                           for r in range(tp)])
+
+
+def make_candidate_runner(cfg: ArchConfig, pcfg: ParallelConfig,
+                          ref_params: dict, opt=None, opt_state=None,
+                          jit: bool = True):
+    """Build ``runner(batch, rewrites) -> Trace`` for the distributed GPT."""
+    mesh = make_device_mesh(pcfg)
+    ann = build_annotations(cfg, pcfg)
+    bugs = pcfg.bugs
+
+    # --- reference->candidate parameter layout mapping (fused QKV) ----------
+    perm = qkv_permutation(cfg, pcfg.tp)
+    inv_perm = np.argsort(perm)
+
+    def to_candidate_layout(name, leaf):
+        if name.endswith("linear_qkv.w"):
+            return leaf[:, perm]
+        if name.endswith("linear_qkv.b"):
+            return leaf[perm]
+        return leaf
+
+    def from_candidate_layout(name, leaf):
+        if name.endswith("linear_qkv.w"):
+            return leaf[:, inv_perm]
+        if name.endswith("linear_qkv.b"):
+            return leaf[inv_perm]
+        return leaf
+
+    named_params = {n: to_candidate_layout(n, l)
+                    for n, l in flatten_named(ref_params).items()}
+
+    def param_pspec(name, leaf):
+        return spec_to_pspec(ann.param_spec(name), leaf.ndim, pcfg)
+
+    # shard the (layout-mapped) reference params onto the mesh
+    sharded = {}
+    for name, leaf in named_params.items():
+        sh = NamedSharding(mesh, param_pspec(name, leaf))
+        sharded[name] = jax.device_put(leaf, sh)
+    params = unflatten_named(sharded, ref_params)
+    param_specs_tree = unflatten_named(
+        {n: param_pspec(n, l) for n, l in named_params.items()}, ref_params)
+
+    bspec = P("dp" if pcfg.dp > 1 else None,
+              "cp" if pcfg.cp > 1 else None)
+    batch_spec = {"tokens": bspec, "labels": bspec}
+    loss_axes = tuple(a for a, n in (("dp", pcfg.dp), ("cp", pcfg.cp))
+                      if n > 1)
+
+    def prep_batch(batch):
+        out = {}
+        for k in ("tokens", "labels"):
+            v = jnp.asarray(batch[k])
+            if pcfg.cp > 1:
+                v = permute_to_zigzag(v, pcfg.cp, 1)
+            out[k] = jax.device_put(v, NamedSharding(mesh, batch_spec[k]))
+        return out
+
+    szs = sizes_coords(pcfg)
+
+    def _run(batch, rewrites=None) -> Trace:
+        b = prep_batch(batch)
+
+        def body(p, bb, probes, rew):
+            def local_loss(pp, pr):
+                ctx = TraceContext("rewrite" if rew else "collect",
+                                   probes=pr, rewrites=rew or {})
+                gloss, rloss = parallel_gpt_loss(pp, bb, cfg, pcfg.sp, bugs,
+                                                 ctx)
+                return gloss, (ctx.fwd, rloss)
+            (_, (taps, rloss)), (pgt, ag) = jax.value_and_grad(
+                local_loss, argnums=(0, 1), has_aux=True)(p, probes)
+            pg = flatten_named(pgt)
+            pg = reduce_param_grads(pg, pcfg, bugs)
+            ag = reduce_act_grads(ag, ann, pcfg, bugs)
+            loss = rloss
+            if loss_axes:
+                loss = jax.lax.psum(loss, loss_axes) / (pcfg.dp * pcfg.cp)
+            return loss, taps, unflatten_named(pg, pgt), ag
+
+        # enumerate taps for THIS batch's shapes
+        ti = {}
+
+        def body_d(p, bb):
+            ctx = TraceContext("collect")
+            parallel_gpt_loss(p, bb, cfg, pcfg.sp, bugs, ctx)[0]
+            ti.clear()
+            ti.update({k: (v.shape, v.dtype) for k, v in ctx.fwd.items()})
+            return jnp.zeros(())
+        jax.eval_shape(jax.shard_map(
+            body_d, mesh=mesh, in_specs=(param_specs_tree, batch_spec),
+            out_specs=P(), check_vma=False), params, b)
+        names = list(ti)
+        pspecs = {n: spec_to_pspec(ann.act_spec(n), len(ti[n][0]), pcfg)
+                  for n in names}
+
+        def gshape(n):
+            shape = list(ti[n][0])
+            spec = ann.act_spec(n)
+            for ax in ("dp", "cp", "tp", "sp"):
+                d = spec.dim_for(ax)
+                if d is not None and szs.get(ax, 1) > 1:
+                    shape[d % len(shape)] *= szs[ax]
+            return tuple(shape)
+
+        probes = {n: jnp.zeros(gshape(n), jnp.float32) for n in names
+                  if jnp.issubdtype(ti[n][1], jnp.floating)}
+        probe_specs = {n: pspecs[n] for n in probes}
+        rew_in = {}
+        if rewrites:
+            for n, v in rewrites.items():
+                if n not in names:
+                    continue
+                v = jnp.asarray(v)
+                spec = ann.act_spec(n)
+                if pcfg.cp > 1 and spec.cp_dim is not None:
+                    v = permute_to_zigzag(v, pcfg.cp, spec.cp_dim % v.ndim)
+                rew_in[n] = jax.device_put(
+                    v, NamedSharding(mesh, pspecs[n]))
+        rew_specs = {n: pspecs[n] for n in rew_in}
+
+        sm = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(param_specs_tree, batch_spec, probe_specs, rew_specs),
+            out_specs=(P(), pspecs, param_specs_tree,
+                       {n: pspecs[n] for n in probes}),
+            check_vma=False)
+        fn = jax.jit(sm) if jit else sm
+        loss, taps, pgt, ag = fn(params, b, probes, rew_in)
+
+        def unzig(n, x):
+            spec = ann.act_spec(n)
+            if pcfg.cp > 1 and spec.cp_dim is not None:
+                return permute_from_zigzag(x, pcfg.cp, spec.cp_dim % x.ndim)
+            return x
+
+        tr = Trace()
+        tr.loss = float(loss)
+        tr.activations = {n: np.asarray(unzig(n, taps[n])) for n in names}
+        tr.act_grads = {n: np.asarray(unzig(n, ag[n])) for n in names
+                        if n in ag}
+        pg_named = {k: from_candidate_layout(k, np.asarray(v))
+                    for k, v in flatten_named(pgt).items()}
+        tr.param_grads = dict(pg_named)
+        tr.meta["fwd_order"] = names
+        tr.meta["annotations"] = ann
+        tr.meta["pcfg"] = pcfg
+
+        if opt is not None:
+            st = opt_state if opt_state is not None else opt.init(ref_params)
+            grads_tree = unflatten_named(
+                {k: jnp.asarray(v) for k, v in pg_named.items()}, ref_params)
+            if pcfg.zero1:
+                new_p, _, info = zero1_update(opt, ref_params, grads_tree,
+                                              st, pcfg.dp, bugs)
+            else:
+                new_p, _, info = opt.update(ref_params, grads_tree, st)
+            tr.main_grads = {k: np.asarray(v) for k, v in
+                             flatten_named(info.main_grads).items()}
+            tr.params_post = {k: np.asarray(v) for k, v in
+                              flatten_named(new_p).items()}
+            tr.grad_norm = float(info.grad_norm)
+        return tr
+
+    return _run
+
+
+# ---------------------------------------------------------------------------
+# Plain (trace-free) distributed training step — used by the loss-curve
+# blindness demo (paper Fig 1) and the detection-latency benchmark (§6.4):
+# the "naive debugging practice" trains the candidate and watches the loss.
+# ---------------------------------------------------------------------------
+
+def make_plain_train_step(cfg: ArchConfig, pcfg: ParallelConfig,
+                          ref_params: dict, opt):
+    """Returns (step_fn, params0, opt_state0): a jitted full train step of
+    the distributed candidate (bugs included) without any tracing."""
+    mesh = make_device_mesh(pcfg)
+    ann = build_annotations(cfg, pcfg)
+    bugs = pcfg.bugs
+    perm = qkv_permutation(cfg, pcfg.tp)
+    inv_perm = np.argsort(perm)
+
+    def to_cand(name, leaf):
+        if name.endswith("linear_qkv.w"):
+            return leaf[:, perm]
+        if name.endswith("linear_qkv.b"):
+            return leaf[perm]
+        return leaf
+
+    named = {n: to_cand(n, l) for n, l in flatten_named(ref_params).items()}
+    pspecs = {n: spec_to_pspec(ann.param_spec(n), l.ndim, pcfg)
+              for n, l in named.items()}
+    params = unflatten_named(
+        {n: jax.device_put(l, NamedSharding(mesh, pspecs[n]))
+         for n, l in named.items()}, ref_params)
+    spec_tree = unflatten_named(pspecs, ref_params)
+    bspec = P("dp" if pcfg.dp > 1 else None, "cp" if pcfg.cp > 1 else None)
+    loss_axes = tuple(a for a, n in (("dp", pcfg.dp), ("cp", pcfg.cp))
+                      if n > 1)
+
+    def body(p, b):
+        gloss, rloss = parallel_gpt_loss(p, b, cfg, pcfg.sp, bugs, None)
+        grads = jax.grad(lambda pp: parallel_gpt_loss(
+            pp, b, cfg, pcfg.sp, bugs, None)[0])(p)
+        pg = reduce_param_grads(flatten_named(grads), pcfg, bugs)
+        if loss_axes:
+            rloss = jax.lax.psum(rloss, loss_axes) / (pcfg.dp * pcfg.cp)
+        return rloss, unflatten_named(pg, grads)
+
+    sm = jax.shard_map(body, mesh=mesh,
+                       in_specs=(spec_tree, {"tokens": bspec,
+                                             "labels": bspec}),
+                       out_specs=(P(), spec_tree), check_vma=False)
+
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = sm(params, batch)
+        params, opt_state, info = opt.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    def prep(batch):
+        out = {}
+        for k in ("tokens", "labels"):
+            v = jnp.asarray(batch[k])
+            if pcfg.cp > 1:
+                v = permute_to_zigzag(v, pcfg.cp, 1)
+            out[k] = jax.device_put(v, NamedSharding(mesh, bspec))
+        return out
+
+    return step, prep, params, opt_state

@@ -1,0 +1,88 @@
+"""Pipeline-parallel staged execution + the stage-division silent bug.
+
+Single-controller JAX gets no correctness surface from a 1F1B microbatch
+schedule, but pipeline parallelism's *semantic* content — which stage owns
+which layers, and how stage-local layer indices map back to the reference
+numbering (paper Fig 5) — is fully modeled here:
+
+* ``stage_division`` computes each stage's [start, end) global layer range;
+  with ``pp_wrong_stage_division`` injected, boundaries are computed with a
+  rounded layers-per-stage (the classic ``ceil(L/pp)`` bug): one layer is
+  executed twice at a stage boundary and another never runs — silent, loss
+  still decreases, the model is simply wrong (paper bug 10).
+* ``make_pp_runner`` executes the model stage by stage with STAGE-LOCAL
+  layer numbering, then canonicalizes tap names via
+  ``canonical_layer_index`` so the trace aligns with the single-device
+  reference — exercising the paper's canonical-module-name machinery on a
+  real trace rather than only in unit tests.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.canonical import canonical_layer_index
+from repro.core.collector import Trace, trace_fn_step
+from repro.core.tap import ensure_ctx
+from repro.models.model import Model, block_apply
+
+
+def stage_division(n_layers: int, pp_size: int,
+                   bugs=frozenset()) -> list[tuple[int, int]]:
+    if "pp_wrong_stage_division" in bugs:
+        # W-CP: ceil-based boundaries overlap by one layer per boundary and
+        # drop the tail — stage i executes [i*cpl_bad, ...) with
+        # cpl_bad = ceil(L/pp) clipped at L, so a layer repeats and the last
+        # layer(s) never run.
+        cpl = math.ceil(n_layers / pp_size) if pp_size > 1 else n_layers
+        out = []
+        for r in range(pp_size):
+            start = min(r * cpl - (1 if r else 0), n_layers)
+            end = min(start + cpl, n_layers)
+            out.append((start, end))
+        return out
+    cpl = n_layers // pp_size
+    return [(r * cpl, (r + 1) * cpl) for r in range(pp_size)]
+
+
+def make_pp_runner(model: Model, params, pp_size: int, opt=None,
+                   opt_state=None, bugs=frozenset()):
+    """Runner(batch, rewrites) -> Trace for the stage-partitioned candidate.
+
+    Tap names use canonical (global) layer indices reconstructed from
+    (pp_rank, local index) — identical to the reference's names when the
+    division is correct."""
+    cfg = model.cfg
+    L = cfg.n_layers
+    stages = stage_division(L, pp_size, bugs)
+
+    def loss_call(p, batch, ctx):
+        ctx = ensure_ctx(ctx)
+        h = model.embed(p, batch, ctx)
+        from repro.models.layers import rmsnorm
+        aux = jnp.zeros((), jnp.float32)
+        for pp_rank, (start, end) in enumerate(stages):
+            for local_idx in range(end - start):
+                executed = start + local_idx           # the layer that RUNS
+                canon = canonical_layer_index(
+                    local_idx, pp_rank, pp_size, 0, 1,
+                    n_layers=L) if L % pp_size == 0 else executed
+                with ctx.scope(f"layers.{canon}"):
+                    h, a, _ = block_apply(p["layers"][executed], cfg,
+                                          "attn_mlp", h, ctx)
+                aux = aux + a
+        h = rmsnorm(p["final_norm"], h)
+        h = ctx.tap("final_norm_out", h)
+        e = (p["embedding"]["word_embeddings"] if cfg.tie_embeddings
+             else p["lm_head"])
+        from repro.models.layers import cross_entropy, _logits
+        return cross_entropy(_logits(h, e), batch["labels"]) + aux
+
+    def run(batch, rewrites=None) -> Trace:
+        tr, _, _ = trace_fn_step(loss_call, params, batch, opt=opt,
+                                 opt_state=opt_state, rewrites=rewrites)
+        return tr
+
+    return run

@@ -1,0 +1,49 @@
+"""ZeRO-1 distributed optimizer (sharded fp32 masters) + its silent bugs.
+
+Adam is elementwise, so partitioning the master/m/v state across DP ranks and
+all-gathering updated params is mathematically identical to the full update —
+which is exactly why its bugs are *silent*.  We model the partitioning
+explicitly on the flattened parameter and inject:
+
+* ``zero_skipped_update`` (paper bug 9): the all-gather after the step
+  returns the PRE-update values for the last rank's partition — those
+  elements simply never train.
+* ``zero_untied_embedding`` (paper bug 5): with tied embeddings, the
+  embedding and LM-head references are owned by different ZeRO partitions;
+  the tied gradient contribution of the LM-head side is lost for the
+  embedding's owner.  Emulated by halving the embedding's applied gradient —
+  the same "tied weights silently drift from the reference" signature.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamW
+
+
+def zero1_update(opt: AdamW, params, grads, state, dp: int,
+                 bugs=frozenset()):
+    """Semantics-equivalent ZeRO-1 step (bugs aside)."""
+    if "zero_untied_embedding" in bugs:
+        def fix(path, g):
+            name = ".".join(str(getattr(k, "key", k)) for k in path)
+            return g * 0.5 if "word_embeddings" in name else g
+        grads = jax.tree_util.tree_map_with_path(fix, grads)
+
+    new_params, new_state, info = opt.update(params, grads, state)
+
+    if "zero_skipped_update" in bugs:
+        def stale(newp, oldp):
+            flat_new = newp.reshape(-1)
+            flat_old = oldp.astype(newp.dtype).reshape(-1)
+            n = flat_new.shape[0]
+            cut = (n // dp) * (dp - 1)
+            out = jnp.concatenate([flat_new[:cut], flat_old[cut:]])
+            return out.reshape(newp.shape)
+        new_params = jax.tree.map(stale, new_params, params)
+        # masters stay consistent with the (buggy) gathered params
+        new_state = dict(new_state)
+        new_state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), new_params)
+    return new_params, new_state, info

@@ -1,0 +1,101 @@
+"""FP8 (e4m3) training recipes + the stale-scale silent bug (paper §6.7, bug 8).
+
+FP8 matmuls quantize operands to float8_e4m3fn with an amax-derived scale and
+accumulate in >= bf16 — so, as the paper observes, the machine epsilon that
+governs the *threshold estimation* is still BF16's.  Three scaling recipes
+are modelled (paper §6.7):
+
+  * "global":      one scale for the whole tensor (TransformerEngine default)
+  * "per_tensor":  alias of global here (per-operand scale)
+  * "tile128":     one scale per 128x128 tile (the DeepSeek-V3 recipe) —
+                   finer granularity, smaller round-off, as §6.7 predicts.
+
+``fp8_linear`` drops into the reference/parallel MLPs when the precision
+recipe asks for it; the Pallas kernel (repro/kernels/fp8_matmul) is the TPU
+execution path for the same math.
+
+Bug 8 ("AR: wrong tensor by FP8 cast"): quantization uses a STALE amax — the
+scale of the previous microbatch's tensor — modelled by halving the amax:
+values clip, the loss is silently wrong.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+E4M3_MAX = 448.0
+F8 = jnp.float8_e4m3fn
+
+
+def _amax(x, recipe: str):
+    ax = jnp.abs(x.astype(jnp.float32))
+    if recipe in ("global", "per_tensor"):
+        return jnp.max(ax)
+    if recipe == "tile128":
+        M, N = x.shape[-2], x.shape[-1]
+        tm, tn = min(128, M), min(128, N)
+        pm, pn = -M % tm, -N % tn
+        axp = jnp.pad(ax, [(0, 0)] * (ax.ndim - 2) + [(0, pm), (0, pn)])
+        Mp, Np = axp.shape[-2], axp.shape[-1]
+        t = axp.reshape(*axp.shape[:-2], Mp // tm, tm, Np // tn, tn)
+        tile_max = t.max(axis=(-3, -1))                       # (..., mt, nt)
+        full = jnp.repeat(jnp.repeat(tile_max, tm, axis=-2), tn, axis=-1)
+        return full[..., :M, :N]
+    raise ValueError(recipe)
+
+
+def quantize_e4m3(x, recipe: str = "global", stale_scale: bool = False):
+    """Returns (q, scale) with x ~= q.astype(f32) * scale."""
+    amax = _amax(x, recipe)
+    if stale_scale:
+        amax = amax * 0.5          # bug 8: scale from a stale (smaller) amax
+    scale = jnp.maximum(amax, 1e-12) / E4M3_MAX
+    q = jnp.clip(x.astype(jnp.float32) / scale, -E4M3_MAX, E4M3_MAX)
+    return q.astype(F8), scale
+
+
+def fp8_matmul(x, w, recipe: str = "global", stale_scale: bool = False,
+               use_kernel: bool = False):
+    """x:(...,K) @ w:(K,N) with fp8 operands, fp32 accumulation."""
+    qx, sx = quantize_e4m3(x, recipe, stale_scale=stale_scale)
+    qw, sw = quantize_e4m3(w, recipe)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out = kops.fp8_matmul(qx, qw)
+    else:
+        out = jnp.matmul(qx.astype(jnp.float32), qw.astype(jnp.float32))
+    if recipe == "tile128":
+        # per-tile scales: dequantize operands then matmul would defeat the
+        # point on real HW; numerically we fold the scale back per element.
+        xd = qx.astype(jnp.float32) * sx
+        wd = qw.astype(jnp.float32) * sw
+        return jnp.matmul(xd, wd)
+    return out * (sx * sw)
+
+
+def fp8_linear(p, x, recipe="global", stale_scale=False):
+    """Straight-through-estimator linear: fp8 forward, bf16/fp32 backward
+    (the standard TransformerEngine training arrangement)."""
+    w = p["w"]
+
+    @jax.custom_vjp
+    def f(x, w):
+        y = fp8_matmul(x.reshape(-1, x.shape[-1]), w, recipe,
+                       stale_scale=stale_scale)
+        return y.reshape(*x.shape[:-1], w.shape[-1]).astype(x.dtype)
+
+    def fwd(x, w):
+        return f(x, w), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        gx = (g @ w.T.astype(g.dtype)).astype(x.dtype)
+        gw = jnp.einsum("...i,...o->io", x.astype(jnp.float32),
+                        g.astype(jnp.float32)).astype(w.dtype)
+        return gx, gw
+
+    f.defvjp(fwd, bwd)
+    y = f(x, w)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y

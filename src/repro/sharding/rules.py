@@ -1,0 +1,325 @@
+"""GSPMD sharding rules for the production mesh (deliverable e backbone).
+
+Maps parameter names / input kinds / cache kinds to PartitionSpecs on the
+(16,16)=("data","model") single-pod or (2,16,16)=("pod","data","model")
+multi-pod mesh.  Rules are written against the TRAILING dims of each leaf so
+that scan-stacked parameters (leading layer dim) inherit the same rule.
+
+GSPMD semantics guarantee sharding choices never change values — only
+layout/collectives — so these rules are a performance/memory surface, which
+is exactly what the roofline/perf loop (EXPERIMENTS.md §Perf) iterates on.
+"""
+from __future__ import annotations
+
+import fnmatch
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MODEL_AXIS = "model"
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules: (glob pattern on flattened name) -> trailing-dims spec
+# ---------------------------------------------------------------------------
+
+PARAM_RULES: list[tuple[str, tuple]] = [
+    ("*embedding.word_embeddings", (MODEL_AXIS, None)),      # vocab-parallel
+    ("*lm_head", (MODEL_AXIS, None)),
+    ("*mask_embed", (None,)),
+    ("*vision_proj.w", (None, MODEL_AXIS)),
+    ("*audio_proj.w", (None, MODEL_AXIS)),
+    # attention
+    ("*linear_qkv.w", (None, MODEL_AXIS)),
+    ("*linear_qkv.b", (MODEL_AXIS,)),
+    ("*linear_proj.w", (MODEL_AXIS, None)),
+    ("*q_norm", (None,)),
+    ("*k_norm", (None,)),
+    # MLA
+    ("*linear_dq.w", (None, MODEL_AXIS)),
+    ("*linear_uq.w", (None, MODEL_AXIS)),
+    ("*linear_dkv.w", (None, None)),
+    ("*linear_krope.w", (None, None)),
+    ("*linear_uk.w", (None, MODEL_AXIS)),
+    ("*linear_uv.w", (None, MODEL_AXIS)),
+    # dense mlp
+    ("*mlp.gate.w", (None, MODEL_AXIS)),
+    ("*mlp.up.w", (None, MODEL_AXIS)),
+    ("*mlp.down.w", (MODEL_AXIS, None)),
+    ("*fc1.w", (None, MODEL_AXIS)),
+    ("*fc1.b", (MODEL_AXIS,)),
+    ("*fc2.w", (MODEL_AXIS, None)),
+    # moe: expert-parallel when n_experts divides the axis, else shard the
+    # ffn dim (mixtral's 8 experts < 16-way model axis)
+    ("*experts.gate", [(MODEL_AXIS, None, None), (None, None, MODEL_AXIS)]),
+    ("*experts.up", [(MODEL_AXIS, None, None), (None, None, MODEL_AXIS)]),
+    ("*experts.down", [(MODEL_AXIS, None, None), (None, MODEL_AXIS, None)]),
+    ("*mlp.router", (None, None)),
+    ("*shared.gate.w", (None, MODEL_AXIS)),
+    ("*shared.up.w", (None, MODEL_AXIS)),
+    ("*shared.down.w", (MODEL_AXIS, None)),
+    # mamba2
+    ("*mixer.in_proj.w", (None, MODEL_AXIS)),
+    ("*mixer.conv_w", (None, MODEL_AXIS)),
+    ("*mixer.conv_b", (MODEL_AXIS,)),
+    ("*mixer.out_proj.w", (MODEL_AXIS, None)),
+    ("*mixer.gate_norm", (MODEL_AXIS,)),
+    ("*mixer.A_log", (None,)),
+    ("*mixer.D", (None,)),
+    ("*mixer.dt_bias", (None,)),
+    # rwkv6 time/channel mix
+    ("*time_mix.recept.w", (None, MODEL_AXIS)),
+    ("*time_mix.key.w", (None, MODEL_AXIS)),
+    ("*time_mix.value.w", (None, MODEL_AXIS)),
+    ("*time_mix.gate.w", (None, MODEL_AXIS)),
+    ("*time_mix.out.w", (MODEL_AXIS, None)),
+    ("*time_mix.decay_B", (None, MODEL_AXIS)),
+    ("*time_mix.w0", (MODEL_AXIS,)),
+    ("*time_mix.ln_out", (MODEL_AXIS,)),
+    ("*time_mix.u", (MODEL_AXIS, None)),
+    ("*channel_mix.key.w", (None, MODEL_AXIS)),
+    ("*channel_mix.value.w", (MODEL_AXIS, None)),
+    ("*channel_mix.recept.w", (None, MODEL_AXIS)),
+]
+
+
+def param_pspec(name: str, shape: tuple, mesh: Mesh) -> P:
+    """Resolve the rule for a flattened param name; leading (scan) dims get
+    None.  A rule may give ALTERNATIVE specs (first whose sharded dims all
+    divide wins); dims that don't divide fall back to replication."""
+    cands: list[tuple] = [()]
+    for pat, s in PARAM_RULES:
+        if fnmatch.fnmatchcase(name, pat):
+            cands = s if isinstance(s, list) else [s]
+            break
+    ndim = len(shape)
+
+    def resolve(spec, strict):
+        full = ([None] * (ndim - len(spec)) + list(spec))[:ndim]
+        out = []
+        for dim, ax in zip(shape, full):
+            if ax is not None and dim % mesh.shape[ax] == 0:
+                out.append(ax)
+            elif ax is not None and strict:
+                return None
+            else:
+                out.append(None)
+        return P(*out)
+
+    for spec in cands:
+        r = resolve(spec, strict=True)
+        if r is not None:
+            return r
+    return resolve(cands[0], strict=False)
+
+
+def with_data_axis(spec: P, shape: tuple, mesh: Mesh,
+                   axes: tuple = ("data",)) -> P:
+    """ZeRO-style densification: additionally shard the first dim that is
+    unsharded and divisible — used for fp32 optimizer state."""
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (dim, ax) in enumerate(zip(shape, entries)):
+        if ax is None and dim % size == 0:
+            entries[i] = axes if len(axes) > 1 else axes[0]
+            return P(*entries)
+    return spec
+
+
+def param_shardings(named_shapes: dict, mesh: Mesh, opt_state: bool = False
+                    ) -> dict:
+    out = {}
+    for name, shp in named_shapes.items():
+        spec = param_pspec(name, shp, mesh)
+        if opt_state:
+            spec = with_data_axis(spec, shp, mesh, dp_axes(mesh))
+        out[name] = NamedSharding(mesh, spec)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_pspec(mesh: Mesh, batch_size: int) -> P:
+    """Shard the global batch over (pod, data) — dropping axes that don't
+    divide (long_500k has batch 1)."""
+    axes = [a for a in dp_axes(mesh)]
+    keep = []
+    rem = batch_size
+    for a in axes:
+        if rem % mesh.shape[a] == 0 and mesh.shape[a] > 1:
+            keep.append(a)
+            rem //= mesh.shape[a]
+    if not keep:
+        return P(None)
+    return P(tuple(keep) if len(keep) > 1 else keep[0])
+
+
+def seq_axes_for(mesh: Mesh, batch_sharded: bool) -> Optional[tuple]:
+    """When the batch can't be sharded (long-context decode), context-
+    parallel the sequence/cache dim over the dp axes instead."""
+    return None if batch_sharded else dp_axes(mesh)
+
+
+def cache_pspec(path: str, shape: tuple, mesh: Mesh, batch_sharded: bool,
+                batch_dim: int) -> P:
+    """Generic KV/state cache rule: batch dim over (pod,data) when it
+    divides, else the longest dim (the sequence) context-parallel over the
+    dp axes; one heads/feature dim over "model" where divisible."""
+    entries: list = [None] * len(shape)
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    if batch_sharded and shape[batch_dim] % dp_size == 0:
+        entries[batch_dim] = dp if len(dp) > 1 else dp[0]
+    else:
+        # context-parallel: shard the largest (sequence) dim
+        seq_dim = int(np.argmax(shape))
+        if shape[seq_dim] % dp_size == 0 and seq_dim != batch_dim:
+            entries[seq_dim] = dp if len(dp) > 1 else dp[0]
+    # one more dim over model, preferring trailing head-ish dims
+    msize = mesh.shape[MODEL_AXIS]
+    for i in range(len(shape) - 2, -1, -1):
+        if entries[i] is None and i != batch_dim and shape[i] % msize == 0 \
+                and shape[i] >= msize:
+            entries[i] = MODEL_AXIS
+            break
+    return P(*entries)
+
+
+# ---------------------------------------------------------------------------
+# In-model sharding constraints (activation layout hints)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ShardingCtx:
+    mesh: Mesh
+    batch_sharded: bool = True
+
+    def _wsc(self, x, spec):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def btd(self, x):
+        """Residual-stream activations (B, S, d)."""
+        dp = dp_axes(self.mesh)
+        dpa = dp if len(dp) > 1 else dp[0]
+        if self.batch_sharded:
+            return self._wsc(x, P(dpa, None, None))
+        return self._wsc(x, P(None, dpa, None))       # context-parallel seq
+
+    def moe_buf(self, x):
+        """Expert dispatch buffer (E, C, d): experts over model, capacity
+        over the dp axes."""
+        dp = dp_axes(self.mesh)
+        dpa = dp if len(dp) > 1 else dp[0]
+        E, C = x.shape[0], x.shape[1]
+        e_ax = MODEL_AXIS if E % self.mesh.shape[MODEL_AXIS] == 0 else None
+        dsz = int(np.prod([self.mesh.shape[a] for a in dp]))
+        c_ax = dpa if C % dsz == 0 else None
+        return self._wsc(x, P(e_ax, c_ax, None))
+
+    def grouped(self, x):
+        """(G, ...) per-data-shard grouped tensors: G over the dp axes."""
+        dp = dp_axes(self.mesh)
+        dpa = dp if len(dp) > 1 else dp[0]
+        dsz = int(np.prod([self.mesh.shape[a] for a in dp]))
+        if x.shape[0] % dsz != 0:
+            return x
+        return self._wsc(x, P(*([dpa] + [None] * (x.ndim - 1))))
+
+    def vmapped_buf(self, x):
+        """(E, C, d) buffer inside a vmapped dispatch: constrain only the
+        expert/ffn dims (the hidden group batch dim is handled by GSPMD
+        propagation from the grouped inputs)."""
+        e_ax = (MODEL_AXIS if x.shape[-3] % self.mesh.shape[MODEL_AXIS] == 0
+                else None)
+        if x.ndim == 3:
+            return self._wsc(x, P(e_ax, None, None))
+        return self._wsc(x, P(None, e_ax, None, None))
+
+    def grouped_buf(self, x):
+        """(G, E, C, d) grouped dispatch buffers: G over dp, E over model
+        when divisible."""
+        dp = dp_axes(self.mesh)
+        dpa = dp if len(dp) > 1 else dp[0]
+        dsz = int(np.prod([self.mesh.shape[a] for a in dp]))
+        g_ax = dpa if x.shape[0] % dsz == 0 else None
+        e_ax = (MODEL_AXIS if x.shape[1] % self.mesh.shape[MODEL_AXIS] == 0
+                else None)
+        return self._wsc(x, P(g_ax, e_ax, None, None))
+
+    def flat_tokens(self, x):
+        """(T[*k], d) flattened token tensors in the MoE dispatch/combine:
+        shard the token dim over the dp axes (GSPMD cannot infer sharding
+        through the sort/gather, and left alone it replicates ~T*k*d fp32
+        — the deepseek prefill memory cliff)."""
+        dp = dp_axes(self.mesh)
+        dpa = dp if len(dp) > 1 else dp[0]
+        dsz = int(np.prod([self.mesh.shape[a] for a in dp]))
+        if x.shape[0] % dsz != 0:
+            return x
+        return self._wsc(x, P(*([dpa] + [None] * (x.ndim - 1))))
+
+
+_CTX: list = []
+
+
+def push_ctx(ctx: ShardingCtx):
+    _CTX.append(ctx)
+
+
+def pop_ctx():
+    _CTX.pop()
+
+
+def current() -> Optional[ShardingCtx]:
+    return _CTX[-1] if _CTX else None
+
+
+def constrain(x, kind: str):
+    ctx = current()
+    if ctx is None:
+        return x
+    return getattr(ctx, kind)(x)
+
+
+def dispatch_groups(n_tokens: int, n_experts: int = 0) -> int:
+    """Number of MoE dispatch groups: one per data shard when a sharding
+    context is active (and the token count divides), else 1.
+
+    Grouping only pays when the experts are truly expert-parallel
+    (n_experts divisible by the model axis); otherwise (e.g. mixtral's 8
+    experts on a 16-way axis) the vmapped buffers add resharding without
+    the EP win — measured +56 GiB on mixtral train (EXPERIMENTS.md §Perf)."""
+    ctx = current()
+    if ctx is None:
+        return 1
+    if n_experts and n_experts % ctx.mesh.shape[MODEL_AXIS] != 0:
+        return 1
+    dp = dp_axes(ctx.mesh)
+    dsz = int(np.prod([ctx.mesh.shape[a] for a in dp]))
+    return dsz if n_tokens % dsz == 0 and ctx.batch_sharded else 1
+
+
+class activate:
+    """``with rules.activate(mesh, batch_sharded):`` — enables the in-model
+    with_sharding_constraint hooks for a lowering."""
+
+    def __init__(self, mesh: Mesh, batch_sharded: bool = True):
+        self.ctx = ShardingCtx(mesh, batch_sharded)
+
+    def __enter__(self):
+        push_ctx(self.ctx)
+        return self.ctx
+
+    def __exit__(self, *a):
+        pop_ctx()

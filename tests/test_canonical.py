@@ -1,0 +1,58 @@
+"""Canonical id + PP/VPP layer-index mapping (paper §4.1, Fig 5)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.canonical import (CanonicalId, canonical_layer_index,
+                                  canonicalize_module, chunk_layers,
+                                  local_layer_index, tap_to_id)
+
+
+def test_paper_fig5_example():
+    # "layer 0 in the 2nd virtual pipeline of the 1st pipeline stage maps to
+    # layer 4 in the reference" — pp=2, vpp=2, 8 layers (2 per chunk)
+    assert canonical_layer_index(0, pp_rank=0, pp_size=2, vpp_rank=1,
+                                 vpp_size=2, n_layers=8) == 4
+
+
+@given(pp=st.integers(1, 8), vpp=st.integers(1, 4), cpl=st.integers(1, 4))
+@settings(max_examples=60, deadline=None)
+def test_mapping_is_a_bijection(pp, vpp, cpl):
+    n_layers = pp * vpp * cpl
+    seen = set()
+    for pr in range(pp):
+        for vr in range(vpp):
+            for li in range(cpl):
+                g = canonical_layer_index(li, pr, pp, vr, vpp, n_layers)
+                assert 0 <= g < n_layers
+                seen.add(g)
+                assert local_layer_index(g, pp, vpp, n_layers) == (pr, vr, li)
+    assert len(seen) == n_layers
+
+
+def test_chunk_layers_divisibility():
+    with pytest.raises(ValueError):
+        chunk_layers(10, 4, 1)
+    assert chunk_layers(12, 2, 3) == 2
+
+
+def test_canonicalize_module_path():
+    # local layer 1 on pp_rank 1 of 2 (vpp 1), 8 layers -> global 5
+    assert canonicalize_module("layers.1.mlp/output", pp_rank=1, pp_size=2,
+                               vpp_rank=0, vpp_size=1, n_layers=8) \
+        == "layers.5.mlp/output"
+    # no pipeline -> unchanged
+    assert canonicalize_module("layers.3.mlp", 0, 1, 0, 1, 8) == "layers.3.mlp"
+
+
+def test_canonical_id_seed_stable_and_distinct():
+    a = CanonicalId(0, 0, "activation", "layers.0.mlp", "input")
+    b = CanonicalId(0, 0, "activation", "layers.0.mlp", "output")
+    assert a.seed() == CanonicalId(0, 0, "activation", "layers.0.mlp",
+                                   "input").seed()
+    assert a.seed() != b.seed()
+
+
+def test_tap_to_id_roundtrip():
+    cid = tap_to_id("layers.3.self_attention/input", "activation")
+    assert cid.module == "layers.3.self_attention"
+    assert cid.role == "input"

@@ -1,0 +1,75 @@
+"""Inference-mode TTrace — the paper's §7 future-work direction, implemented:
+differential checking of the DECODE path (one-token steps + caches).
+
+Reference = naive MLA decode (materialized per-head K/V); candidate = the
+production absorbed-latent decode.  They are independent implementations of
+the same math, exactly the reference/candidate relationship of the paper.
+"""
+import contextlib
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.harness import make_decode_runner, ttrace_check
+from repro.core.thresholds import MACHINE_EPS
+from repro.data.synthetic import make_batch
+from repro.models import attention as attn_mod
+from repro.models.model import Model
+
+
+@contextlib.contextmanager
+def _mla_impl(impl, bugs=frozenset()):
+    old = (attn_mod.MLA_DECODE_IMPL, attn_mod.MLA_DECODE_BUGS)
+    attn_mod.MLA_DECODE_IMPL, attn_mod.MLA_DECODE_BUGS = impl, bugs
+    try:
+        yield
+    finally:
+        attn_mod.MLA_DECODE_IMPL, attn_mod.MLA_DECODE_BUGS = old
+
+
+def _runner(model, params, impl, bugs=frozenset()):
+    def decode_fn(p, cache, toks, pos):
+        with _mla_impl(impl, bugs):
+            return model.decode_step(p, cache, toks, pos)
+    return make_decode_runner(model, params, decode_fn=decode_fn)
+
+
+@pytest.fixture(scope="module")
+def mla_setup():
+    cfg = get_config("deepseek-v2-236b").reduced()
+    cfg = dataclasses.replace(cfg, moe=None, arch_type="dense")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": np.asarray(
+        make_batch(cfg, 2, 12)["tokens"])}
+    return model, params, batch
+
+
+def test_absorbed_vs_naive_mla_decode_equivalent(mla_setup):
+    """Two independent MLA decode implementations agree within FP floor."""
+    model, params, batch = mla_setup
+    ref = _runner(model, params, "naive")
+    cand = _runner(model, params, "absorbed")
+    res = ttrace_check(ref, cand, batch, estimate=False, localize=False,
+                       margin=64.0)
+    assert res.passed, res.report.summary()
+
+
+def test_stale_rope_position_decode_bug_detected(mla_setup):
+    """Serving bug: query rope uses pos-1 — silent (finite logits, plausible
+    decoding) but every step's logits drift; TTrace flags it from step 1."""
+    model, params, batch = mla_setup
+    ref = _runner(model, params, "naive")
+    buggy = _runner(model, params, "absorbed",
+                    bugs=frozenset(["decode_stale_rope_pos"]))
+    res = ttrace_check(ref, buggy, batch, estimate=False, localize=False,
+                       margin=64.0)
+    assert not res.passed
+    assert all(np.isfinite(v).all()
+               for v in res.candidate.activations.values())
+    first = res.report.first_flagged_activation()
+    # step 0 attends only to itself (pos clamped) — drift begins at step 1+
+    assert first.name.startswith("decode.t")

@@ -1,0 +1,110 @@
+"""Distributed TTrace integration tests (8 forced host devices, subprocess —
+the main pytest process must keep seeing 1 device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, devices: int = 8, timeout: int = 1200) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env, cwd=ROOT)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    return out.stdout
+
+
+PREAMBLE = """
+import dataclasses, jax
+from repro.configs.base import get_config, MoEConfig
+from repro.models.model import Model
+from repro.data.synthetic import make_batch
+from repro.optim.adamw import AdamW
+from repro.core.harness import make_model_runner, ttrace_check
+from repro.parallel.api import ParallelConfig, make_candidate_runner
+
+cfg = dataclasses.replace(get_config("gpt-paper").reduced(),
+                          n_layers=2, vocab=512, tie_embeddings=True)
+m = Model(cfg)
+params = m.init(jax.random.PRNGKey(0))
+opt = AdamW(lr=1e-3); st = opt.init(params)
+batch = make_batch(cfg, 4, 32)
+ref = make_model_runner(m, params, opt, st)
+"""
+
+
+@pytest.mark.slow
+def test_clean_parallel_matrix_passes():
+    out = _run(PREAMBLE + """
+for pc in [ParallelConfig(dp=2, tp=2),
+           ParallelConfig(dp=2, tp=2, sp=True),
+           ParallelConfig(dp=2, cp=2, tp=2, sp=True),
+           ParallelConfig(dp=2, tp=2, zero1=True)]:
+    cand = make_candidate_runner(cfg, pc, params, opt, st)
+    res = ttrace_check(ref, cand, batch, localize=False)
+    print(pc.features, "passed:", res.passed)
+    assert res.passed, res.report.summary()
+print("ALL_CLEAN_PASS")
+""")
+    assert "ALL_CLEAN_PASS" in out
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("bug,req", [
+    ("tp_wrong_embedding_mask", ""),
+    ("sp_layernorm_not_synced", "sp"),
+    ("cp_wrong_attention_grad", "cp"),
+])
+def test_injected_bug_detected_and_localized(bug, req):
+    out = _run(PREAMBLE + f"""
+import fnmatch
+from repro.bugs.registry import BUGS
+spec = BUGS["{bug}"]
+pc = ParallelConfig(dp=2, cp=2 if "cp" in spec.requires else 1, tp=2,
+                    sp="sp" in spec.requires,
+                    zero1="zero1" in spec.requires,
+                    bugs=frozenset(["{bug}"]))
+cand = make_candidate_runner(cfg, pc, params, opt, st)
+res = ttrace_check(ref, cand, batch, localize=True)
+assert not res.passed, "bug not detected"
+loc = res.localized_module or "-"
+assert fnmatch.fnmatchcase(loc, spec.expected_module), (loc,
+                                                        spec.expected_module)
+print("DETECTED_AND_LOCALIZED", loc)
+""")
+    assert "DETECTED_AND_LOCALIZED" in out
+
+
+@pytest.mark.slow
+def test_merge_jax_array_layout_verification():
+    """merger.merge_jax_array reconstructs a sharded jax.Array and verifies
+    its device layout against the user annotation."""
+    out = _run("""
+import jax, numpy as np
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.core.annotations import ShardSpec
+from repro.core.merger import merge_jax_array
+
+mesh = Mesh(np.array(jax.devices()[:4]).reshape(2, 2), ("dp", "tp"))
+x = jnp.arange(64.0).reshape(8, 8)
+xs = jax.device_put(x, NamedSharding(mesh, P(None, "tp")))
+full, rep = merge_jax_array(xs, ShardSpec(tp_dim=1),
+                            {"tp": "tp", "dp": "dp"})
+assert rep.ok, rep.problems()
+np.testing.assert_allclose(full, np.asarray(x))
+
+# wrong annotation (claims dim 0) -> layout mismatch reported
+full2, rep2 = merge_jax_array(xs, ShardSpec(tp_dim=0),
+                              {"tp": "tp", "dp": "dp"})
+assert not rep2.ok and rep2.layout_mismatches
+print("MERGE_OK")
+""", devices=4)
+    assert "MERGE_OK" in out

@@ -1,0 +1,110 @@
+"""HLO collective parsing + GSPMD sharding rules."""
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.hlo import parse_hlo_collectives, shape_bytes
+from repro.sharding import rules
+from jax.sharding import PartitionSpec as P
+
+HLO = """
+HloModule test
+
+ENTRY %main (p0: f32[64,128]) -> f32[64,128] {
+  %p0 = f32[64,128]{1,0} parameter(0)
+  %ag = f32[64,2048]{1,0} all-gather(f32[64,128]{1,0} %p0), replica_groups={}
+  %ar = f32[64,128]{1,0} all-reduce(f32[64,128]{1,0} %p0), to_apply=%sum
+  %rs = f32[4,128]{1,0} reduce-scatter(f32[64,128]{1,0} %p0), dimensions={0}
+  %cp = f32[64,128]{1,0} collective-permute(f32[64,128]{1,0} %p0)
+  %a2a = f32[64,128]{1,0} all-to-all(f32[64,128]{1,0} %p0), dimensions={0}
+  ROOT %out = f32[64,128]{1,0} add(%ar, %cp)
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[64,128]{1,0}") == 64 * 128 * 4
+    assert shape_bytes("bf16[8]") == 16
+    assert shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+    assert shape_bytes("pred[]") == 1
+
+
+def test_parse_collectives_counts_and_bytes():
+    got = parse_hlo_collectives(HLO)
+    n = 64 * 128 * 4
+    assert got["all-gather"]["count"] == 1
+    assert got["all-gather"]["operand_bytes"] == n
+    assert got["all-gather"]["result_bytes"] == 64 * 2048 * 4
+    assert got["all-reduce"]["count"] == 1
+    assert got["reduce-scatter"]["count"] == 1
+    assert got["collective-permute"]["count"] == 1
+    assert got["all-to-all"]["count"] == 1
+    assert got["total"]["count"] == 5
+    assert got["total"]["operand_bytes"] == 5 * n
+
+
+def test_parse_real_jit_hlo():
+    """An actually-compiled psum should be found by the parser."""
+    import jax.numpy as jnp
+    mesh = jax.make_mesh((1,), ("x",))
+    # single-device: use a sharded matmul that forces no collectives,
+    # then just assert the parser runs on real HLO without error
+    c = jax.jit(lambda a: a @ a).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    got = parse_hlo_collectives(c.as_text())
+    assert got["total"]["count"] == 0
+
+
+# ---- sharding rules ---------------------------------------------------------
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+def test_param_rules_basic():
+    mesh = _FakeMesh()
+    assert rules.param_pspec("embedding.word_embeddings", (32000, 4096),
+                             mesh) == P("model", None)
+    assert rules.param_pspec("layers.0.self_attention.linear_qkv.w",
+                             (4096, 6144), mesh) == P(None, "model")
+    # scan-stacked leaf: leading layer dim replicated
+    assert rules.param_pspec("layers.self_attention.linear_qkv.w",
+                             (32, 4096, 6144), mesh) == P(None, None, "model")
+    # norm weights replicated
+    assert rules.param_pspec("layers.0.input_norm", (4096,), mesh) == P(None)
+
+
+def test_param_rules_fallback_alternatives():
+    mesh = _FakeMesh()
+    # 8 experts don't divide 16 -> fall back to sharding the ffn dim
+    assert rules.param_pspec("layers.mlp.experts.gate", (32, 8, 4096, 14336),
+                             mesh) == P(None, None, None, "model")
+    # 160 experts divide 16 -> expert-parallel
+    assert rules.param_pspec("layers.mlp.experts.gate", (59, 160, 5120, 1536),
+                             mesh) == P(None, "model", None, None)
+
+
+def test_param_rules_nondivisible_replicates():
+    mesh = _FakeMesh()
+    assert rules.param_pspec("layers.0.mlp.down.w", (100, 50), mesh) \
+        == P(None, None)
+
+
+def test_with_data_axis_densification():
+    mesh = _FakeMesh()
+    spec = rules.with_data_axis(P("model", None), (32000, 4096), mesh,
+                                ("data",))
+    assert spec == P("model", "data")
+
+
+def test_cache_pspec_heads_vs_seq():
+    mesh = _FakeMesh()
+    # stacked kv cache (L, B, S, H, D): batch over data, heads over model
+    spec = rules.cache_pspec("layers.k", (32, 128, 32768, 32, 128), mesh,
+                             True, batch_dim=1)
+    assert spec == P(None, "data", None, "model", None)
+    # batch=1 long-context: sequence context-parallel over data
+    spec = rules.cache_pspec("layers.k", (32, 1, 524288, 32, 128), mesh,
+                             False, batch_dim=1)
+    assert spec[2] == "data"

@@ -1,0 +1,106 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fp8_matmul import fp8_matmul
+from repro.kernels.relerr import rel_err_fused
+from repro.kernels.ssm_scan import gla_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,D", [
+    (1, 128, 2, 2, 64), (2, 256, 4, 2, 64), (1, 256, 8, 2, 128),
+    (1, 128, 4, 1, 64),
+])
+@pytest.mark.parametrize("mode,window", [("causal", 0), ("swa", 64),
+                                         ("bidirectional", 0)])
+def test_flash_attention_sweep(B, S, H, Hkv, D, mode, window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    o = flash_attention(q, k, v, mode=mode, window=window, bq=64, bk=64)
+    r = ref.attention_ref(q, k, v, mode=mode, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64), dtype)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64), dtype)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64), dtype)
+    o = flash_attention(q, k, v, bq=64, bk=64)
+    r = ref.attention_ref(q, k, v)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("dk,dv,chunk", [(16, 16, 32), (8, 32, 16),
+                                         (32, 16, 64)])
+@pytest.mark.parametrize("scalar,excl", [(True, False), (False, False),
+                                         (False, True)])
+def test_gla_scan_sweep(dk, dv, chunk, scalar, excl):
+    B, S, H = 2, 128, 2
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, S, H, dk))
+    k = jax.random.normal(ks[1], (B, S, H, dk))
+    v = jax.random.normal(ks[2], (B, S, H, dv))
+    if scalar:
+        lw = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H, 1)))
+    else:
+        lw = -0.02 * jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, dk)))
+    y1, s1 = gla_scan(q, k, v, lw, chunk=chunk, exclusive=excl)
+    y2, s2 = ref.gla_scan_ref(q, k, v, lw, exclusive=excl)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=5e-4)
+
+
+@pytest.mark.parametrize("M,K,N,bm", [(128, 128, 128, 64), (64, 256, 192, 32),
+                                      (256, 64, 64, 64)])
+def test_fp8_matmul_sweep(M, K, N, bm):
+    ks = jax.random.split(KEY, 2)
+    x = (8 * jax.random.normal(ks[0], (M, K))).astype(jnp.float8_e4m3fn)
+    w = (8 * jax.random.normal(ks[1], (K, N))).astype(jnp.float8_e4m3fn)
+    o = fp8_matmul(x, w, bm=bm, bn=bm, bk=bm)
+    r = ref.fp8_matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-2)
+
+
+@given(n=st.integers(3, 4000), scale=st.floats(1e-6, 1e3))
+@settings(max_examples=20, deadline=None)
+def test_relerr_fused_property(n, scale):
+    rng = np.random.default_rng(n)
+    a = (rng.standard_normal(n) * scale).astype(np.float32)
+    b = a + (rng.standard_normal(n) * scale * 1e-3).astype(np.float32)
+    got = rel_err_fused(a, b, interpret=True)
+    want = ref.rel_err_ref(a, b)
+    assert got == pytest.approx(want, rel=1e-3, abs=1e-9)
+
+
+def test_relerr_zero_reference():
+    z = np.zeros(16, np.float32)
+    b = np.ones(16, np.float32)
+    assert rel_err_fused(z, b) == pytest.approx(4.0)   # ||a-b|| with ||a||=0
+
+
+def test_ops_gla_rwkv_bonus_matches_model_impl():
+    from repro.models.ssm import lin_attn_chunked
+    B, S, H, dk, dv = 1, 64, 2, 8, 8
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, S, H, dk))
+    k = jax.random.normal(ks[1], (B, S, H, dk))
+    v = jax.random.normal(ks[2], (B, S, H, dv))
+    lw = -0.01 * jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, dk)))
+    u = 0.3 * jnp.ones((H, dk))
+    y1, s1 = ops.gla_scan(q, k, v, lw, chunk=16, exclusive=True, u=u)
+    y2, s2 = lin_attn_chunked(q, k, v, lw, chunk=16, u=u)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=5e-4)

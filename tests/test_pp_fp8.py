@@ -1,0 +1,102 @@
+"""Dedicated paths for the two remaining Table-1 rows: PP stage division
+(bug 10) and the FP8 stale-scale cast (bug 8)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.collector import trace_fn_step
+from repro.core.harness import make_model_runner, ttrace_check
+from repro.core.tap import ensure_ctx
+from repro.core.thresholds import MACHINE_EPS
+from repro.data.synthetic import make_batch
+from repro.models.model import Model
+from repro.parallel.pp import make_pp_runner, stage_division
+from repro.precision.fp8 import fp8_linear
+
+
+# ---------------------------------------------------------------------------
+# bug 10: PP wrong stage division
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def gpt4():
+    cfg = dataclasses.replace(get_config("gpt-paper").reduced(), n_layers=4,
+                              vocab=256)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 2, 32)
+    return cfg, m, params, batch
+
+
+def test_stage_division_correct_and_buggy():
+    assert stage_division(8, 2) == [(0, 4), (4, 8)]
+    bad = stage_division(8, 2, bugs=frozenset(["pp_wrong_stage_division"]))
+    (s0, e0), (s1, e1) = bad
+    assert s1 < e0 or e1 < 8          # overlap or dropped tail
+
+
+def test_pp_candidate_correct_division_passes(gpt4):
+    cfg, m, params, batch = gpt4
+    ref = make_model_runner(m, params)
+    cand = make_pp_runner(m, params, pp_size=2)
+    res = ttrace_check(ref, cand, batch, localize=False)
+    assert res.passed, res.report.summary()
+
+
+def test_pp_wrong_stage_division_detected_and_localized(gpt4):
+    """Paper bug 10: one layer executes twice, another never runs — loss
+    still finite/plausible, trace diverges exactly at the first misplaced
+    layer's canonical name."""
+    cfg, m, params, batch = gpt4
+    ref = make_model_runner(m, params)
+    cand = make_pp_runner(m, params, pp_size=2,
+                          bugs=frozenset(["pp_wrong_stage_division"]))
+    res = ttrace_check(ref, cand, batch, localize=False)
+    assert not res.passed
+    assert np.isfinite(res.candidate.loss)          # silent, not a crash
+    # stage 1 re-executes layer 1 under canonical name layers.2
+    assert res.report.localized.startswith("layers.2")
+
+
+# ---------------------------------------------------------------------------
+# bug 8: FP8 stale-scale cast (TTrace under an FP8 recipe, paper §6.7)
+# ---------------------------------------------------------------------------
+
+def _fp8_net(stale):
+    def loss_call(params, batch, ctx):
+        ctx = ensure_ctx(ctx)
+        h = batch["x"]
+        for i, p in enumerate(params["layers"]):
+            with ctx.scope(f"layers.{i}.mlp"):
+                h = ctx.tap("input", h)
+                h = jax.nn.gelu(fp8_linear(p, h, stale_scale=stale))
+                h = ctx.tap("output", h)
+        return (h.astype(jnp.float32) ** 2).mean()
+    return loss_call
+
+
+def test_fp8_stale_scale_detected_with_bf16_thresholds():
+    key = jax.random.PRNGKey(0)
+    params = {"layers": [
+        {"w": 0.2 * jax.random.normal(jax.random.fold_in(key, i), (64, 64))}
+        for i in range(3)]}
+    batch = {"x": jax.random.normal(jax.random.PRNGKey(9), (8, 64))}
+
+    def runner(stale):
+        def run(b, rewrites=None):
+            tr, _, _ = trace_fn_step(_fp8_net(stale), params, b,
+                                     rewrites=rewrites)
+            return tr
+        return run
+
+    res = ttrace_check(runner(False), runner(False), batch,
+                       eps=MACHINE_EPS["bfloat16"], localize=False)
+    assert res.passed                      # correct fp8 recipe: no flags
+    res2 = ttrace_check(runner(False), runner(True), batch,
+                        eps=MACHINE_EPS["bfloat16"], localize=False)
+    assert not res2.passed                 # stale amax cast flagged
+    assert res2.report.localized.startswith("layers.0.mlp")

@@ -1,0 +1,139 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned architecture is instantiated as the REDUCED variant of the same
+family (2 layers, d_model<=256, <=4 experts) and runs one forward + one train
+step on CPU, asserting output shapes and absence of NaNs.  The FULL configs
+are exercised only via the dry-run (ShapeDtypeStruct, no allocation).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, list_configs, INPUT_SHAPES
+from repro.data.synthetic import make_batch, make_decode_inputs
+from repro.models.model import Model
+from repro.optim.adamw import AdamW
+
+ARCHS = [n for n in list_configs()]
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = get_config(name).reduced()
+            m = Model(cfg)
+            params = m.init(jax.random.PRNGKey(0))
+            cache[name] = (cfg, m, params)
+        return cache[name]
+
+    return get
+
+
+def _finite(tree):
+    return all(bool(jnp.all(jnp.isfinite(x.astype(jnp.float32))))
+               for x in jax.tree.leaves(tree))
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_shapes_and_finite(built, name):
+    cfg, m, params = built(name)
+    B, S = 2, 32
+    batch = make_batch(cfg, B, S)
+    h, aux = jax.jit(m.forward)(params, batch)
+    S_out = S if cfg.arch_type != "vlm" else S  # vlm: img tokens prepended
+    if cfg.arch_type == "vlm":
+        S_out = batch["image_embeds"].shape[1] + batch["tokens"].shape[1]
+    assert h.shape == (B, S_out, cfg.d_model)
+    assert _finite(h), f"{name}: NaN/Inf in forward hidden states"
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_one_train_step(built, name):
+    cfg, m, params = built(name)
+    batch = make_batch(cfg, 2, 32)
+    opt = AdamW(lr=1e-3)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        (loss, met), grads = jax.value_and_grad(m.loss, has_aux=True)(
+            params, batch)
+        params, state, info = opt.update(params, grads, state)
+        return params, state, loss
+
+    p2, s2, loss = step(params, state, batch)
+    assert np.isfinite(float(loss)), f"{name}: non-finite loss"
+    assert _finite(p2), f"{name}: NaN/Inf in updated params"
+    # the step must actually change the parameters
+    delta = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert delta > 0.0, f"{name}: optimizer did not update parameters"
+
+
+@pytest.mark.parametrize("name", [n for n in ARCHS
+                                  if get_config(n).is_decoder])
+def test_decode_step(built, name):
+    cfg, m, params = built(name)
+    B, S = 2, 32
+    cache = m.init_cache(B, S)
+    toks = make_decode_inputs(cfg, B)["tokens"]
+    logits, cache2 = jax.jit(m.decode_step)(params, cache, toks, jnp.int32(3))
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert _finite(logits), f"{name}: NaN/Inf in decode logits"
+
+
+def test_all_ten_assigned_archs_present():
+    assigned = {
+        "deepseek-v2-236b", "rwkv6-7b", "codeqwen1.5-7b", "zamba2-7b",
+        "qwen1.5-110b", "mixtral-8x7b", "qwen3-32b", "llava-next-34b",
+        "tinyllama-1.1b", "hubert-xlarge",
+    }
+    assert assigned <= set(list_configs())
+
+
+def test_full_configs_match_assignment():
+    spec = {
+        "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102400),
+        "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+        "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+    }
+    for name, (L, d, H, Hkv, dff, V) in spec.items():
+        c = get_config(name)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+                c.vocab) == (L, d, H, Hkv, dff, V), name
+    assert get_config("deepseek-v2-236b").moe.n_experts == 160
+    assert get_config("deepseek-v2-236b").moe.top_k == 6
+    assert get_config("deepseek-v2-236b").mla.kv_lora_rank == 512
+    assert get_config("mixtral-8x7b").moe.n_experts == 8
+    assert get_config("mixtral-8x7b").moe.top_k == 2
+    assert get_config("mixtral-8x7b").window == 4096
+    assert get_config("zamba2-7b").ssm.d_state == 64
+    assert get_config("qwen3-32b").qk_norm
+    assert get_config("qwen1.5-110b").qkv_bias
+    assert not get_config("hubert-xlarge").causal
+
+
+def test_shape_skip_rules():
+    """long_500k only for sub-quadratic archs; no decode for encoder-only."""
+    long = INPUT_SHAPES["long_500k"]
+    dec = INPUT_SHAPES["decode_32k"]
+    assert get_config("rwkv6-7b").supports_shape(long)[0]
+    assert get_config("zamba2-7b").supports_shape(long)[0]
+    assert get_config("mixtral-8x7b").supports_shape(long)[0]
+    assert not get_config("qwen3-32b").supports_shape(long)[0]
+    assert not get_config("hubert-xlarge").supports_shape(dec)[0]
+    assert not get_config("hubert-xlarge").supports_shape(long)[0]

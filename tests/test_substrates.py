@@ -1,0 +1,192 @@
+"""Optimizer / data / checkpoint / precision substrates."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.checkpoint.store import load_checkpoint, save_checkpoint
+from repro.data.synthetic import DataLoader, make_batch
+from repro.optim.adamw import AdamW, global_norm, warmup_cosine
+from repro.parallel.zero import zero1_update
+from repro.precision.fp8 import E4M3_MAX, fp8_linear, quantize_e4m3
+
+
+# ---- optimizer -------------------------------------------------------------
+
+def _toy():
+    params = {"w": jnp.array([1.0, -2.0, 3.0]),
+              "norm": jnp.array([1.0, 1.0])}
+    grads = {"w": jnp.array([0.1, 0.2, -0.1]),
+             "norm": jnp.array([0.01, -0.01])}
+    return params, grads
+
+
+def test_adamw_first_step_matches_closed_form():
+    params, grads = _toy()
+    opt = AdamW(lr=0.1, weight_decay=0.0, clip=0.0)
+    st_ = opt.init(params)
+    new, st2, info = opt.update(params, grads, st_)
+    # step 1: m_hat = g, v_hat = g^2  ->  update ~= sign(g)
+    expect = params["w"] - 0.1 * grads["w"] / (jnp.abs(grads["w"]) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new["w"]), np.asarray(expect),
+                               rtol=1e-4)
+
+
+def test_adamw_weight_decay_mask():
+    params, grads = _toy()
+    opt = AdamW(lr=0.1, weight_decay=0.5, clip=0.0)
+    st_ = opt.init(params)
+    zero_g = jax.tree.map(jnp.zeros_like, grads)
+    new, _, _ = opt.update(params, zero_g, st_)
+    assert float(jnp.abs(new["w"] - params["w"]).max()) > 0   # decayed
+    np.testing.assert_allclose(np.asarray(new["norm"]),
+                               np.asarray(params["norm"]))   # masked
+
+
+def test_grad_clipping():
+    params, grads = _toy()
+    big = jax.tree.map(lambda g: g * 1e3, grads)
+    opt = AdamW(lr=0.1, clip=1.0)
+    _, _, info = opt.update(params, big, opt.init(params))
+    assert float(info.grad_norm) == pytest.approx(1.0, rel=1e-4)
+    assert float(info.pre_clip_norm) > 100
+
+
+def test_main_grads_are_fp32():
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    grads = {"w": jnp.ones((4,), jnp.bfloat16)}
+    opt = AdamW(lr=0.1)
+    _, _, info = opt.update(params, grads, opt.init(params))
+    assert info.main_grads["w"].dtype == jnp.float32
+
+
+def test_warmup_cosine_schedule():
+    lr = warmup_cosine(1.0, warmup=10, total=100)
+    assert float(lr(0)) < float(lr(9)) <= 1.0
+    assert float(lr(99)) < float(lr(50))
+
+
+def test_zero1_equals_plain_adamw_without_bugs():
+    params, grads = _toy()
+    opt = AdamW(lr=0.1)
+    p1, _, _ = opt.update(params, grads, opt.init(params))
+    p2, _, _ = zero1_update(opt, params, grads, opt.init(params), dp=2)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_zero1_skipped_update_bug_freezes_last_partition():
+    params, grads = _toy()
+    opt = AdamW(lr=0.1)
+    p2, _, _ = zero1_update(opt, params, grads, opt.init(params), dp=3,
+                            bugs=frozenset(["zero_skipped_update"]))
+    w = np.asarray(p2["w"])
+    assert w[2] == pytest.approx(3.0)          # last partition untouched
+    assert w[0] != pytest.approx(1.0)
+
+
+# ---- data ------------------------------------------------------------------
+
+def test_data_determinism_and_shapes():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    b1 = make_batch(cfg, 4, 32, seed=1, step=7)
+    b2 = make_batch(cfg, 4, 32, seed=1, step=7)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = make_batch(cfg, 4, 32, seed=1, step=8)
+    assert np.abs(np.asarray(b1["tokens"]) - np.asarray(b3["tokens"])).max() > 0
+    assert b1["tokens"].shape == (4, 32)
+    assert int(b1["tokens"].max()) < cfg.vocab
+
+
+def test_data_modalities():
+    acfg = get_config("hubert-xlarge").reduced()
+    ab = make_batch(acfg, 2, 16)
+    assert ab["features"].shape == (2, 16, acfg.audio_dim)
+    assert ab["mask"].dtype == bool
+    vcfg = get_config("llava-next-34b").reduced()
+    vb = make_batch(vcfg, 2, 32)
+    assert vb["image_embeds"].shape[-1] == vcfg.vision_dim
+    assert vb["tokens"].shape[1] + vb["image_embeds"].shape[1] == 32
+
+
+def test_dataloader_iterates():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    from repro.configs.base import InputShape
+    dl = DataLoader(cfg, InputShape("t", 16, 2, "train"))
+    b0 = next(dl)
+    b1 = next(dl)
+    assert np.abs(np.asarray(b0["tokens"]) - np.asarray(b1["tokens"])).max() > 0
+
+
+# ---- checkpoint --------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10, dtype=jnp.float32).reshape(2, 5),
+            "b": {"c": jnp.ones((3,), jnp.bfloat16)},
+            "d": [jnp.zeros((2, 2)), jnp.full((1,), 7.0)]}
+    save_checkpoint(str(tmp_path / "ck"), tree, step=42,
+                    extra={"note": "hi"})
+    back, step, extra = load_checkpoint(str(tmp_path / "ck"), tree)
+    assert step == 42 and extra["note"] == "hi"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_sharding_large_leaf(tmp_path):
+    tree = {"big": jnp.arange(4096, dtype=jnp.float32).reshape(64, 64)}
+    man = save_checkpoint(str(tmp_path / "ck"), tree, shard_bytes=4096)
+    assert len(man["leaves"]["big"]["pieces"]) > 1
+    back, _, _ = load_checkpoint(str(tmp_path / "ck"), tree)
+    np.testing.assert_array_equal(np.asarray(back["big"]),
+                                  np.asarray(tree["big"]))
+
+
+# ---- fp8 ---------------------------------------------------------------------
+
+@given(scale=st.floats(0.01, 100.0))
+@settings(max_examples=20, deadline=None)
+def test_quantize_dequantize_error_bounded(scale):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32) * scale)
+    q, s = quantize_e4m3(x)
+    back = q.astype(jnp.float32) * s
+    rel = float(jnp.linalg.norm(back - x) / jnp.linalg.norm(x))
+    assert rel < 0.08       # e4m3 relative precision
+
+
+def test_quantize_respects_e4m3_range():
+    x = jnp.asarray([[1e6, -1e6, 0.5]])
+    q, s = quantize_e4m3(x)
+    assert float(jnp.max(jnp.abs(q.astype(jnp.float32)))) <= E4M3_MAX
+
+
+def test_fp8_linear_forward_close_backward_exact_dtype():
+    rng = jax.random.PRNGKey(0)
+    x = jax.random.normal(rng, (8, 16))
+    p = {"w": 0.1 * jax.random.normal(jax.random.PRNGKey(1), (16, 4))}
+    y = fp8_linear(p, x)
+    exact = x @ p["w"]
+    rel = float(jnp.linalg.norm(y - exact) / jnp.linalg.norm(exact))
+    assert rel < 0.1
+    g = jax.grad(lambda w: fp8_linear({"w": w}, x).sum())(p["w"])
+    assert g.shape == p["w"].shape and bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_fp8_stale_scale_bug_degrades():
+    rng = jax.random.PRNGKey(0)
+    x = jax.random.normal(rng, (32, 32))
+    w = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (32, 32))
+    from repro.precision.fp8 import fp8_matmul
+    exact = x @ w
+    good = fp8_matmul(x, w)
+    bad = fp8_matmul(x, w, stale_scale=True)
+    e_good = float(jnp.linalg.norm(good - exact))
+    e_bad = float(jnp.linalg.norm(bad - exact))
+    assert e_bad > 2 * e_good

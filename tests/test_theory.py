@@ -1,0 +1,90 @@
+"""Empirical checks of the paper's §5 theory.
+
+* Thm 5.1 — transformer layers at standard init are smooth: Lipschitz-like
+  amplification of a small random perturbation is 1 + O(d^-1/2).
+* Thm 5.2 — accumulated FP (perturbation-induced) activation error grows at
+  most ~linearly with depth, not exponentially.
+* §5.2    — the perturbation estimator tracks actual FP round-off: a correct
+  bf16 distributed-order difference stays within the estimated thresholds.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.harness import make_model_runner
+from repro.core.thresholds import MACHINE_EPS, estimate_thresholds
+from repro.data.synthetic import make_batch
+from repro.models.model import Model, block_apply, block_init
+
+
+def _amplification(d_model, key, n=8):
+    cfg = dataclasses.replace(
+        get_config("gpt-paper").reduced(), d_model=d_model,
+        n_heads=max(2, d_model // 64), n_kv_heads=max(2, d_model // 64),
+        d_head=min(64, d_model // 2), d_ff=2 * d_model, n_layers=1)
+    p = block_init(key, cfg, "attn_mlp", jnp.float32)
+    amps = []
+    for i in range(n):
+        kx, kd = jax.random.split(jax.random.fold_in(key, i))
+        x = jax.random.normal(kx, (1, 32, d_model))
+        dx = jax.random.normal(kd, x.shape) * 1e-4
+        y0, _, _ = block_apply(p, cfg, "attn_mlp", x, None)
+        y1, _, _ = block_apply(p, cfg, "attn_mlp", x + dx, None)
+        amps.append(float(jnp.linalg.norm(y1 - y0) / jnp.linalg.norm(dx)))
+    return float(np.mean(amps))
+
+
+def test_thm51_layer_smoothness_at_init():
+    """Amplification close to 1, and the excess shrinks as d grows."""
+    key = jax.random.PRNGKey(0)
+    a_small = _amplification(64, key)
+    a_big = _amplification(256, key)
+    assert a_small < 3.0 and a_big < 3.0       # C_l close to 1, not blowing up
+    assert abs(a_big - 1.0) < abs(a_small - 1.0) + 0.5  # ~1 + O(d^-1/2)
+
+
+def test_thm52_error_growth_subexponential():
+    """Perturbation-induced relative activation error vs depth: the deep/
+    shallow ratio must be far below exponential growth (2^L)."""
+    eps = MACHINE_EPS["bfloat16"]
+    cfg = dataclasses.replace(get_config("gpt-paper").reduced(),
+                              n_layers=12, d_model=128, n_heads=4,
+                              n_kv_heads=4, d_ff=256,
+                              compute_dtype="bfloat16")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    runner = make_model_runner(m, params)
+    thr, _ = estimate_thresholds(runner, make_batch(cfg, 2, 32), eps)
+    acts = thr.per_tensor["activation"]
+    first = acts["layers.0.mlp/output"]
+    last = acts["layers.11.mlp/output"]
+    assert last / first < 12          # ~linear in L (12), << 2^12
+    assert last < 100 * eps           # magnitude stays near machine eps
+
+
+def test_estimator_covers_actual_bf16_reorder_noise():
+    """Summing in a different order (the FP effect distribution introduces)
+    stays under the estimated thresholds — no false positives (§5.2)."""
+    eps = MACHINE_EPS["bfloat16"]
+    cfg = dataclasses.replace(get_config("gpt-paper").reduced(),
+                              n_layers=4, compute_dtype="bfloat16")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 2, 32)
+    runner = make_model_runner(m, params)
+    thr, base = estimate_thresholds(runner, batch, eps)
+    # reorder-equivalent run: same math on permuted batch rows, un-permuted
+    perm = np.array([1, 0])
+    b2 = {k: np.asarray(v)[perm] for k, v in batch.items()}
+    t2 = runner(b2, None)
+    from repro.core.thresholds import rel_err
+    for name, a in base.activations.items():
+        b = t2.activations[name][np.argsort(perm)] \
+            if t2.activations[name].shape[0] == 2 else t2.activations[name]
+        if a.shape != b.shape:
+            continue
+        assert rel_err(a, b) <= thr.threshold("activation", name), name

@@ -1,0 +1,117 @@
+"""Threshold estimation (§5) + equivalence checker (§4.4) unit behavior."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import canonical as C
+from repro.core.checker import compare_traces
+from repro.core.collector import Trace
+from repro.core.harness import make_model_runner, ttrace_check
+from repro.core.thresholds import (MACHINE_EPS, Thresholds,
+                                   estimate_thresholds, rel_err)
+from repro.data.synthetic import make_batch
+from repro.models.model import Model
+from repro.optim.adamw import AdamW
+
+
+def test_rel_err_frobenius():
+    a = np.ones((4, 4), np.float32)
+    b = a.copy()
+    b[0, 0] = 2.0
+    assert abs(rel_err(a, b) - 0.25) < 1e-6
+    assert rel_err(a, a) == 0.0
+
+
+def test_threshold_floor_and_margin():
+    thr = Thresholds(eps=1e-7, margin=8.0, floor_mult=4.0,
+                     per_tensor={"activation": {"x": 1e-5}})
+    assert thr.threshold("activation", "x") == pytest.approx(8e-5)
+    assert thr.threshold("activation", "unknown") == pytest.approx(3.2e-6)
+    # param_post uses the wider kind margin
+    assert thr.threshold(C.KIND_PARAM_POST, "unknown") == pytest.approx(
+        64 * 4e-7)
+
+
+def _mk_trace(vals: dict) -> Trace:
+    t = Trace()
+    t.activations = {k: np.asarray(v, np.float32) for k, v in vals.items()}
+    t.meta["fwd_order"] = list(vals)
+    return t
+
+
+def test_compare_and_propagation_localization():
+    ref = _mk_trace({"embedding/output": [1.0, 1.0],
+                     "layers.0.mlp/output": [2.0, 2.0],
+                     "layers.1.mlp/output": [3.0, 3.0]})
+    cand = _mk_trace({"embedding/output": [1.0, 1.0],
+                      "layers.0.mlp/output": [2.5, 2.0],   # first divergence
+                      "layers.1.mlp/output": [9.0, 3.0]})
+    thr = Thresholds(eps=1e-7)
+    rep = compare_traces(ref, cand, thr, kinds=(C.KIND_ACT,))
+    assert not rep.passed
+    assert rep.localized == "layers.0.mlp"
+    assert rep.localization_mode == "propagation"
+
+
+def test_shape_mismatch_flagged():
+    ref = _mk_trace({"a/output": np.ones((2, 2))})
+    cand = _mk_trace({"a/output": np.ones((2, 3))})
+    rep = compare_traces(ref, cand, Thresholds(eps=1e-7),
+                         kinds=(C.KIND_ACT,))
+    assert rep.flagged and "shape" in rep.flagged[0].note
+
+
+def test_missing_tensor_reported():
+    ref = _mk_trace({"a/output": np.ones(2), "b/output": np.ones(2)})
+    cand = _mk_trace({"a/output": np.ones(2)})
+    rep = compare_traces(ref, cand, Thresholds(eps=1e-7),
+                         kinds=(C.KIND_ACT,))
+    assert rep.missing
+
+
+def test_estimate_thresholds_scale_with_eps():
+    """Bigger perturbation -> (roughly) proportionally bigger estimates."""
+    cfg = dataclasses.replace(get_config("gpt-paper").reduced(), n_layers=2,
+                              vocab=256)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    runner = make_model_runner(m, params)
+    batch = make_batch(cfg, 2, 16)
+    t1, _ = estimate_thresholds(runner, batch, 1e-6)
+    t2, _ = estimate_thresholds(runner, batch, 1e-4)
+    k = "final_norm_out"
+    r = t2.per_tensor["activation"][k] / max(t1.per_tensor["activation"][k],
+                                             1e-30)
+    assert 10 < r < 1000    # ~100x, allowing nonlinearity
+
+
+def test_ttrace_check_identical_candidate_passes():
+    cfg = dataclasses.replace(get_config("gpt-paper").reduced(), n_layers=2,
+                              vocab=256)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    opt = AdamW(lr=1e-3)
+    st = opt.init(params)
+    batch = make_batch(cfg, 2, 16)
+    res = ttrace_check(make_model_runner(m, params, opt, st),
+                       make_model_runner(m, params, opt, st), batch,
+                       localize=False)
+    assert res.passed
+
+
+def test_ttrace_detects_single_device_bug_and_localizes():
+    cfg = dataclasses.replace(get_config("gpt-paper").reduced(), n_layers=2,
+                              vocab=256)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    batch = make_batch(cfg, 2, 16)
+    bad = jax.tree.map(lambda x: x, params)
+    bad["layers"][1]["mlp"]["down"]["w"] = \
+        bad["layers"][1]["mlp"]["down"]["w"] * 1.01
+    res = ttrace_check(make_model_runner(m, params),
+                       make_model_runner(m, bad), batch, localize=True)
+    assert not res.passed
+    assert "layers.1.mlp" in res.localized_module
