@@ -1,0 +1,74 @@
+"""Checker hot-loop benchmark: per-tensor numpy loop vs the batched engine.
+
+Builds synthetic device-resident trace sections (N tensors, ragged sizes)
+and times both comparison paths of core.relerr_engine:
+
+* ``loop``   — the pre-refactor semantics: pull each tensor to host, float64
+  norms, one pair at a time;
+* ``packed`` — the batched device path the engine auto-selects for large
+  sections (packed segmented Pallas kernel on TPU, fused one-dispatch XLA
+  reduction elsewhere).
+
+Emits the usual CSV rows and writes ``BENCH_checker.json``
+(name -> us_per_call) so the speedup is a tracked trajectory, not a claim.
+Row names are stable across backends — ``checker/packed/...`` always means
+"the engine's batched path"; WHICH executor ran (packed kernel / blas /
+fused) is recorded in the CSV ``derived`` column, so trajectories from
+different backends are comparable by row but attributable by mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import ROWS, emit, timeit, write_json
+from repro.core.relerr_engine import batched_rel_err
+
+# (n_tensors, total_elements): the large case models a trace section of the
+# bigger configs (deepseek_v2_236b / qwen15_110b scale per-tensor sizes,
+# where the old loop's float64 temporaries spill out of cache); the small
+# case tracks where the numpy loop still wins (and why the engine keeps the
+# size cutoff).
+CASES = [
+    (50, 1 << 17),
+    (200, 1 << 22),
+    (200, 1 << 26),
+]
+
+
+def _make_sections(n_tensors: int, total: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.5, 1.5, n_tensors)
+    sizes = np.maximum(1, (w * (total / w.sum())).astype(int))
+    sec_a, sec_b = {}, {}
+    for i, n in enumerate(sizes):
+        a = rng.standard_normal(n).astype(np.float32)
+        b = a + 1e-4 * rng.standard_normal(n).astype(np.float32)
+        sec_a[f"t{i}"] = jnp.asarray(a)
+        sec_b[f"t{i}"] = jnp.asarray(b)
+    return sec_a, sec_b
+
+
+def run(json_path: str = "BENCH_checker.json") -> None:
+    backend = jax.default_backend()
+    batched_mode = {"tpu": "packed", "cpu": "blas"}.get(backend, "fused")
+    first_row = len(ROWS)
+    for n_tensors, total in CASES:
+        sec_a, sec_b = _make_sections(n_tensors, total)
+        label = f"{n_tensors}x{total // 1024}k"
+        t_loop = timeit(
+            lambda: batched_rel_err(sec_a, sec_b, mode="loop"), iters=5)
+        t_batched = timeit(
+            lambda: batched_rel_err(sec_a, sec_b, mode=batched_mode),
+            iters=5)
+        emit(f"checker/loop/{label}", t_loop)
+        emit(f"checker/packed/{label}", t_batched,
+             derived=f"speedup={t_loop / t_batched:.2f}x "
+                     f"mode={batched_mode}")
+    if json_path:
+        write_json(json_path, rows=ROWS[first_row:])
+
+
+if __name__ == "__main__":
+    run()

@@ -15,6 +15,14 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+def write_json(path: str, rows=None):
+    """Persist emitted rows as {name: us_per_call} (BENCH_*.json contract)."""
+    import json
+    with open(path, "w") as f:
+        json.dump({name: us for name, us, _ in (rows or ROWS)}, f,
+                  indent=2, sort_keys=True)
+
+
 def timeit(fn, *args, warmup: int = 1, iters: int = 5) -> float:
     """Median wall time per call in microseconds."""
     for _ in range(warmup):

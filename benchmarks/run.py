@@ -7,7 +7,11 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
   fig9     -> benchmarks.fp8_smoothness     (FP8 recipes stay smooth)
   sec6.4   -> benchmarks.overhead           (detection latency vs naive)
   kernels  -> benchmarks.kernel_bench       (Pallas vs oracle sweep)
+  checker  -> benchmarks.checker_bench      (batched vs loop trace checking)
   roofline -> benchmarks.roofline           (3-term analysis; --roofline)
+
+``--json PATH`` additionally writes the emitted rows as machine-readable
+JSON (name -> us_per_call) so PRs leave a perf trajectory behind.
 """
 from __future__ import annotations
 
@@ -20,9 +24,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: bug_table,curves,fp8,overhead,kernels,"
-                         "roofline")
+                         "checker,roofline")
     ap.add_argument("--roofline", action="store_true",
                     help="include the (slow, 512-device) roofline sweep")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON {name: us_per_call}")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -35,6 +41,9 @@ def main() -> None:
     if on("kernels"):
         from benchmarks import kernel_bench
         _safe(kernel_bench.run, failures, "kernels")
+    if on("checker"):
+        from benchmarks import checker_bench
+        _safe(checker_bench.run, failures, "checker")
     if on("fp8"):
         from benchmarks import fp8_smoothness
         _safe(fp8_smoothness.run, failures, "fp8")
@@ -50,6 +59,10 @@ def main() -> None:
     if on("roofline") and (args.roofline or (want and "roofline" in want)):
         from benchmarks import roofline
         _safe(roofline.run, failures, "roofline")
+
+    if args.json:
+        from benchmarks.common import write_json
+        write_json(args.json)
 
     if failures:
         print(f"# {len(failures)} benchmark(s) failed: {failures}")

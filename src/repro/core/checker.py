@@ -14,7 +14,8 @@ import numpy as np
 
 from repro.core import canonical as C
 from repro.core.collector import Trace
-from repro.core.thresholds import Thresholds, rel_err
+from repro.core.relerr_engine import batched_rel_err
+from repro.core.thresholds import Thresholds
 
 
 @dataclass
@@ -82,17 +83,27 @@ def compare_traces(ref: Trace, cand: Trace, thr: Thresholds,
     rep = Report()
     for kind in kinds:
         rs, cs = ref.section(kind), cand.section(kind)
-        for name, a in rs.items():
+        # pass 1 — metadata only (shapes come from the leaves without any
+        # host transfer); pass 2 — ONE batched device reduction per section.
+        entries: list[tuple[str, Optional[str]]] = []
+        names = []
+        for name in rs:
             if name not in cs:
                 rep.missing.append(f"{kind}:{name} missing from candidate")
                 continue
-            b = cs[name]
-            if a.shape != b.shape:
-                rep.records.append(CheckRecord(
-                    kind, name, float("inf"), 0.0, True,
-                    note=f"shape {b.shape} != ref {a.shape}"))
+            sa, sb = rs.shape_of(name), cs.shape_of(name)
+            if sa != sb:
+                entries.append((name, f"shape {sb} != ref {sa}"))
                 continue
-            e = rel_err(a, b)
+            entries.append((name, None))
+            names.append(name)
+        errs = batched_rel_err(rs, cs, names)
+        for name, mismatch in entries:
+            if mismatch is not None:
+                rep.records.append(CheckRecord(
+                    kind, name, float("inf"), 0.0, True, note=mismatch))
+                continue
+            e = errs[name]
             t = thr.threshold(kind, name)
             rep.records.append(CheckRecord(kind, name, e, t, e > t))
     # propagation-order localization: the first flagged forward activation is

@@ -6,10 +6,15 @@
 * main (fp32, post-clip) gradients from the optimizer,
 * post-step parameters,
 
-as a ``Trace`` of host numpy arrays keyed by canonical tap/param names.
+as a ``Trace`` whose sections are **lazily device-resident**: leaves stay
+``jax.Array`` until something explicitly asks for numpy (``section[name]``
+or ``.host()``).  The batched checker (core.relerr_engine) reads the raw
+leaves, so a full equivalence check never transfers activations that pass —
+only N x 2 reduction scalars cross the device boundary.
 """
 from __future__ import annotations
 
+from collections.abc import MutableMapping
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -49,27 +54,101 @@ def unflatten_named(names: dict, template):
 # Trace
 # ---------------------------------------------------------------------------
 
+class Section(MutableMapping):
+    """One trace kind: an ordered name -> tensor mapping with a lazy host
+    boundary.
+
+    Leaves are stored as handed in (``jax.Array`` or numpy).  ``sec[name]``
+    / ``.items()`` materialize numpy (cached); ``.raw(name)`` /
+    ``.raw_items()`` return the stored leaf without any transfer — the
+    contract the batched checker relies on.
+    """
+    __slots__ = ("_data", "_host")
+
+    def __init__(self, data=None):
+        if isinstance(data, Section):
+            self._data = dict(data._data)
+            self._host = dict(data._host)
+        else:
+            self._data = dict(data) if data else {}
+            self._host = {}
+
+    # ---- lazy host access --------------------------------------------------
+    def __getitem__(self, name) -> np.ndarray:
+        h = self._host.get(name)
+        if h is None:
+            h = self._host[name] = np.asarray(self._data[name])
+        return h
+
+    def __setitem__(self, name, value):
+        self._data[name] = value
+        self._host.pop(name, None)
+
+    def __delitem__(self, name):
+        del self._data[name]
+        self._host.pop(name, None)
+
+    def __iter__(self):
+        return iter(self._data)
+
+    def __len__(self):
+        return len(self._data)
+
+    def __contains__(self, name):
+        return name in self._data
+
+    def __repr__(self):
+        return f"Section({list(self._data)!r})"
+
+    # ---- device access -----------------------------------------------------
+    def raw(self, name):
+        """The stored leaf — no host transfer."""
+        return self._data[name]
+
+    def raw_items(self):
+        return self._data.items()
+
+    def shape_of(self, name) -> tuple:
+        return tuple(self._data[name].shape)
+
+    def host(self) -> dict[str, np.ndarray]:
+        """Materialize every leaf to numpy (one explicit bulk transfer)."""
+        return {name: self[name] for name in self._data}
+
+
+_SECTION_FIELDS = ("activations", "act_grads", "param_grads", "main_grads",
+                   "params_post")
+
+
 @dataclass
 class Trace:
-    activations: dict[str, np.ndarray] = field(default_factory=dict)
-    act_grads: dict[str, np.ndarray] = field(default_factory=dict)
-    param_grads: dict[str, np.ndarray] = field(default_factory=dict)
-    main_grads: dict[str, np.ndarray] = field(default_factory=dict)
-    params_post: dict[str, np.ndarray] = field(default_factory=dict)
+    activations: Section = field(default_factory=Section)
+    act_grads: Section = field(default_factory=Section)
+    param_grads: Section = field(default_factory=Section)
+    main_grads: Section = field(default_factory=Section)
+    params_post: Section = field(default_factory=Section)
     loss: float = float("nan")
     grad_norm: float = float("nan")
     meta: dict = field(default_factory=dict)
 
-    def section(self, kind: str) -> dict[str, np.ndarray]:
+    def __setattr__(self, name, value):
+        # plain dicts (tests, ad-hoc traces) are adopted into lazy Sections
+        if name in _SECTION_FIELDS and not isinstance(value, Section):
+            value = Section(value)
+        object.__setattr__(self, name, value)
+
+    def section(self, kind: str) -> Section:
         from repro.core import canonical as C
         return {C.KIND_ACT: self.activations, C.KIND_ACT_GRAD: self.act_grads,
                 C.KIND_PARAM_GRAD: self.param_grads,
                 C.KIND_MAIN_GRAD: self.main_grads,
                 C.KIND_PARAM_POST: self.params_post}[kind]
 
-
-def _np(tree):
-    return {k: np.asarray(v) for k, v in tree.items()}
+    def host(self) -> "Trace":
+        """Force every section to host numpy (explicit bulk transfer)."""
+        for f in _SECTION_FIELDS:
+            getattr(self, f).host()
+        return self
 
 
 # ---------------------------------------------------------------------------
@@ -116,6 +195,15 @@ def trace_train_step(model, params, batch, opt=None, opt_state=None,
                          tap_filter=tap_filter, jit=jit)
 
 
+def _make_probes(shapes, tap_filter, collect_act_grads):
+    if not collect_act_grads:
+        return {}
+    return {k: jnp.zeros(s.shape, jnp.float32)
+            for k, s in shapes.items()
+            if (tap_filter is None or tap_filter(k))
+            and jnp.issubdtype(s.dtype, jnp.floating)}
+
+
 def trace_fn_step(loss_call, params, batch, opt=None, opt_state=None,
                   rewrites=None, collect_act_grads=True, tap_filter=None,
                   jit=True) -> tuple[Trace, dict, Optional[dict]]:
@@ -128,14 +216,7 @@ def trace_fn_step(loss_call, params, batch, opt=None, opt_state=None,
                   else {k: jnp.asarray(v) for k, v in rewrites.items()})
     shapes, fwd_order = tap_shapes(loss_call, params, batch, rewrites_j)
     mode = "rewrite" if rewrites_j else "collect"
-
-    if collect_act_grads:
-        probes = {k: jnp.zeros(s.shape, jnp.float32)
-                  for k, s in shapes.items()
-                  if (tap_filter is None or tap_filter(k))
-                  and jnp.issubdtype(s.dtype, jnp.floating)}
-    else:
-        probes = {}
+    probes = _make_probes(shapes, tap_filter, collect_act_grads)
 
     def loss_fn(p, probes):
         ctx = TraceContext(mode, probes=probes, rewrites=rewrites_j or {})
@@ -152,17 +233,87 @@ def trace_fn_step(loss_call, params, batch, opt=None, opt_state=None,
 
     tr = Trace()
     tr.loss = float(loss)
-    tr.activations = {k: np.asarray(fwd[k]) for k in fwd_order}
-    tr.act_grads = {k: np.asarray(agrads[k]) for k in fwd_order
-                    if k in agrads}
-    tr.param_grads = _np(flatten_named(pgrads))
+    tr.activations = {k: fwd[k] for k in fwd_order}
+    tr.act_grads = {k: agrads[k] for k in fwd_order if k in agrads}
+    tr.param_grads = flatten_named(pgrads)
     tr.meta["fwd_order"] = list(fwd_order)
 
     new_params, new_state = params, opt_state
     if opt is not None:
         upd = jax.jit(opt.update) if jit else opt.update
         new_params, new_state, info = upd(params, pgrads, opt_state)
-        tr.main_grads = _np(flatten_named(info.main_grads))
-        tr.params_post = _np(flatten_named(new_params))
+        tr.main_grads = flatten_named(info.main_grads)
+        tr.params_post = flatten_named(new_params)
         tr.grad_norm = float(info.grad_norm)
     return tr, new_params, new_state
+
+
+# ---------------------------------------------------------------------------
+# Fused pair collector (threshold estimation in one compiled call)
+# ---------------------------------------------------------------------------
+
+def trace_pair_step(model, params, batch2, opt=None, opt_state=None,
+                    collect_act_grads: bool = True, tap_filter=None,
+                    jit: bool = True) -> tuple[Trace, Trace]:
+    """Collect traces of TWO batches (stacked on a leading axis of size 2 in
+    every leaf of ``batch2``) in ONE vmapped, compiled step — the fused path
+    of threshold estimation: base and eps-perturbed reference run together
+    instead of two serial jit round-trips.
+    """
+    def loss_call(p, b, ctx):
+        loss, _ = model.loss(p, b, ctx=ctx)
+        return loss
+
+    return trace_fn_pair(loss_call, params, batch2, opt=opt,
+                         opt_state=opt_state,
+                         collect_act_grads=collect_act_grads,
+                         tap_filter=tap_filter, jit=jit)
+
+
+def trace_fn_pair(loss_call, params, batch2, opt=None, opt_state=None,
+                  collect_act_grads=True, tap_filter=None, jit=True
+                  ) -> tuple[Trace, Trace]:
+    batch2_j = {k: jnp.asarray(v) for k, v in batch2.items()}
+    batch0 = {k: v[0] for k, v in batch2_j.items()}
+    shapes, fwd_order = tap_shapes(loss_call, params, batch0, None)
+    probes = _make_probes(shapes, tap_filter, collect_act_grads)
+
+    def loss_fn(p, b, probes):
+        ctx = TraceContext("collect", probes=probes, rewrites={})
+        loss = loss_call(p, b, ctx)
+        return loss, ctx.fwd
+
+    def step(p, b, probes):
+        (loss, fwd), (pgrads, agrads) = jax.value_and_grad(
+            loss_fn, argnums=(0, 2), has_aux=True)(p, b, probes)
+        return loss, fwd, pgrads, agrads
+
+    pair = jax.vmap(step, in_axes=(None, 0, None))
+    pair_c = jax.jit(pair) if jit else pair
+    loss, fwd, pgrads, agrads = pair_c(params, batch2_j, probes)
+
+    opt_out = None
+    if opt is not None:
+        st = opt_state if opt_state is not None else opt.init(params)
+        upd = jax.vmap(opt.update, in_axes=(None, 0, None))
+        upd = jax.jit(upd) if jit else upd
+        opt_out = upd(params, pgrads, st)
+
+    traces = []
+    for i in (0, 1):
+        tr = Trace()
+        tr.loss = float(loss[i])
+        tr.activations = {k: fwd[k][i] for k in fwd_order}
+        tr.act_grads = {k: agrads[k][i] for k in fwd_order if k in agrads}
+        tr.param_grads = {k: v[i]
+                          for k, v in flatten_named(pgrads).items()}
+        tr.meta["fwd_order"] = list(fwd_order)
+        if opt_out is not None:
+            new_params, _, info = opt_out
+            tr.main_grads = {k: v[i] for k, v in
+                             flatten_named(info.main_grads).items()}
+            tr.params_post = {k: v[i] for k, v in
+                              flatten_named(new_params).items()}
+            tr.grad_norm = float(info.grad_norm[i])
+        traces.append(tr)
+    return traces[0], traces[1]

@@ -22,7 +22,7 @@ from dataclasses import dataclass
 from typing import Callable, Optional
 
 from repro.core.checker import Report, compare_traces, localize_with_rewrites
-from repro.core.collector import Trace, trace_train_step
+from repro.core.collector import Trace, trace_pair_step, trace_train_step
 from repro.core.thresholds import MACHINE_EPS, Thresholds, estimate_thresholds
 
 
@@ -54,12 +54,25 @@ class TTraceResult:
 
 def make_model_runner(model, params, opt=None, opt_state=None,
                       tap_filter=None, jit=True) -> Callable:
-    """Reference runner over the single-device model zoo."""
+    """Reference runner over the single-device model zoo.
+
+    The returned runner also exposes ``run.pair(batch2) -> (Trace, Trace)``
+    — two batches stacked on a leading axis collected in ONE vmapped
+    compiled call — which threshold estimation uses to fuse the base and
+    eps-perturbed reference runs for float-input models.
+    """
     def run(batch, rewrites=None) -> Trace:
         tr, _, _ = trace_train_step(model, params, batch, opt=opt,
                                     opt_state=opt_state, rewrites=rewrites,
                                     tap_filter=tap_filter, jit=jit)
         return tr
+
+    def run_pair(batch2):
+        return trace_pair_step(model, params, batch2, opt=opt,
+                               opt_state=opt_state, tap_filter=tap_filter,
+                               jit=jit)
+
+    run.pair = run_pair
     return run
 
 

@@ -12,6 +12,10 @@ flagged.
 For token (integer) inputs the perturbation is applied at the first float
 tensor on the differentiation path — the embedding output — via the rewrite
 mechanism; for audio/VLM the float frontend features are perturbed directly.
+Float-input models additionally take the FUSED estimation path: the base and
+perturbed batches are stacked on a leading axis and collected in one vmapped
+compiled call (collector.trace_pair_step) instead of two serial jit
+round-trips.
 """
 from __future__ import annotations
 
@@ -22,6 +26,7 @@ import numpy as np
 from repro.core import canonical as C
 from repro.core.collector import Trace
 from repro.core.generator import perturb
+from repro.core.relerr_engine import batched_rel_err, rel_err_np
 
 MACHINE_EPS = {
     "float32": 2.0 ** -24,
@@ -33,24 +38,14 @@ MACHINE_EPS = {
 }
 
 
-# Set to a positive element count to route big-tensor comparisons through
-# the fused Pallas reduction (repro.kernels.relerr) — the TPU-idiomatic
-# analogue of the paper's multithreaded C++ checker.  Off by default on CPU
-# (the interpreter is slower than numpy); on TPU set e.g. 1 << 20.
-FUSED_RELERR_MIN_ELEMS = int(__import__("os").environ.get(
-    "REPRO_FUSED_RELERR_MIN_ELEMS", "0"))
-
-
 def rel_err(a: np.ndarray, b: np.ndarray) -> float:
-    """Relative Frobenius error ||a-b|| / ||a|| (paper §2.2)."""
-    if FUSED_RELERR_MIN_ELEMS and np.asarray(a).size >= FUSED_RELERR_MIN_ELEMS:
-        from repro.kernels.ops import rel_err as fused
-        return fused(np.asarray(a, np.float32), np.asarray(b, np.float32))
-    a64 = np.asarray(a, np.float64)
-    b64 = np.asarray(b, np.float64)
-    na = np.linalg.norm(a64)
-    d = np.linalg.norm(a64 - b64)
-    return float(d / na) if na > 0 else float(d)
+    """Relative Frobenius error ||a-b|| / ||a|| (paper §2.2) for one pair.
+
+    Section-scale comparisons go through relerr_engine.batched_rel_err,
+    which picks the device-resident batched path by backend/size; this
+    per-pair float64 form stays as the reference semantic.
+    """
+    return rel_err_np(a, b)
 
 
 @dataclass
@@ -77,18 +72,21 @@ def _diff_sections(t1: Trace, t2: Trace) -> dict[str, dict[str, float]]:
     out = {}
     for kind in (C.KIND_ACT, C.KIND_ACT_GRAD, C.KIND_PARAM_GRAD,
                  C.KIND_MAIN_GRAD, C.KIND_PARAM_POST):
-        s1, s2 = t1.section(kind), t2.section(kind)
-        out[kind] = {k: rel_err(s1[k], s2[k]) for k in s1 if k in s2}
+        out[kind] = batched_rel_err(t1.section(kind), t2.section(kind))
     return out
+
+
+def _float_keys(batch: dict) -> list[str]:
+    return [k for k, v in batch.items()
+            if np.issubdtype(np.asarray(v).dtype, np.floating)
+            and k != "loss_mask"]
 
 
 def perturbed_batch_or_rewrites(batch: dict, base_trace: Trace,
                                 eps: float, seed: int = 0):
     """Returns (batch', rewrites').  Float model inputs are perturbed in the
     batch; token-only models are perturbed at the embedding output."""
-    float_keys = [k for k, v in batch.items()
-                  if np.issubdtype(np.asarray(v).dtype, np.floating)
-                  and k != "loss_mask"]
+    float_keys = _float_keys(batch)
     if float_keys:
         b2 = dict(batch)
         for i, k in enumerate(float_keys):
@@ -109,9 +107,31 @@ def estimate_thresholds(run_trace, batch: dict, eps: float,
     Returns (thresholds, base_reference_trace) — the base trace is reused as
     the reference side of the differential test, so threshold estimation
     costs exactly one extra iteration (paper §3 step 1).
+
+    If the runner exposes ``.pair`` (collector.trace_pair_step underneath)
+    and the batch has float inputs, base and perturbed runs are stacked and
+    collected in one compiled call; otherwise the two runs stay serial (the
+    token-input perturbation needs the base trace's embedding output before
+    the perturbed run can start).
     """
-    t1 = run_trace(batch, None)
-    b2, rew = perturbed_batch_or_rewrites(batch, t1, eps, seed)
-    t2 = run_trace(b2, rew)
+    t1 = t2 = None
+    pair = getattr(run_trace, "pair", None)
+    if pair is not None and _float_keys(batch):
+        b2, _ = perturbed_batch_or_rewrites(batch, None, eps, seed)
+        stacked = {k: np.stack([np.asarray(batch[k]), np.asarray(b2[k])])
+                   for k in batch}
+        try:
+            t1, t2 = pair(stacked)
+        except Exception as e:      # model not vmappable -> serial fallback
+            import warnings
+            warnings.warn(
+                "fused threshold estimation failed "
+                f"({type(e).__name__}: {e}); falling back to two serial "
+                "reference runs", RuntimeWarning)
+            t1 = t2 = None
+    if t1 is None:
+        t1 = run_trace(batch, None)
+        b2, rew = perturbed_batch_or_rewrites(batch, t1, eps, seed)
+        t2 = run_trace(b2, rew)
     thr = Thresholds(eps=eps, margin=margin, per_tensor=_diff_sections(t1, t2))
     return thr, t1

@@ -1,8 +1,12 @@
 """Jitted public wrappers for the Pallas kernels.
 
-``INTERPRET`` defaults to True because this container has no TPU; on real
-hardware set ``repro.kernels.ops.INTERPRET = False`` (or the
-REPRO_PALLAS_INTERPRET=0 env var) and the same kernels compile to Mosaic.
+Interpret mode is auto-selected from the backend: compiled Mosaic on TPU,
+interpreter elsewhere (this container has no TPU).  Override with the
+REPRO_PALLAS_INTERPRET env var (0/1) or by setting
+``repro.kernels.ops.INTERPRET`` to True/False directly; ``INTERPRET =
+None`` means auto.  Auto-selection happens at call time, not import time —
+importing this module must not initialize the JAX backend (scripts set
+XLA_FLAGS after imports).
 """
 from __future__ import annotations
 
@@ -15,18 +19,23 @@ from repro.kernels import fp8_matmul as _mm
 from repro.kernels import relerr as _re
 from repro.kernels import ssm_scan as _ssm
 
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+_env = os.environ.get("REPRO_PALLAS_INTERPRET")
+INTERPRET = (_env != "0") if _env is not None else None
+
+
+def interpret_mode() -> bool:
+    return _re.default_interpret() if INTERPRET is None else INTERPRET
 
 
 def flash_attention(q, k, v, mode="causal", window=0, bq=512, bk=512):
     return _fa.flash_attention(q, k, v, mode=mode, window=window, bq=bq,
-                               bk=bk, interpret=INTERPRET)
+                               bk=bk, interpret=interpret_mode())
 
 
 def gla_scan(q, k, v, log_w, chunk=128, exclusive=False, u=None):
     """Kernel-backed equivalent of models.ssm.lin_attn_chunked (s0=0)."""
     y, s = _ssm.gla_scan(q, k, v, log_w, chunk=chunk, exclusive=exclusive,
-                         interpret=INTERPRET)
+                         interpret=interpret_mode())
     if u is not None:
         bonus = jnp.einsum("bshk,hk,bshk->bsh", q.astype(jnp.float32),
                            u.astype(jnp.float32), k.astype(jnp.float32))
@@ -35,8 +44,17 @@ def gla_scan(q, k, v, log_w, chunk=128, exclusive=False, u=None):
 
 
 def fp8_matmul(x, w, bm=256, bn=256, bk=256):
-    return _mm.fp8_matmul(x, w, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)
+    return _mm.fp8_matmul(x, w, bm=bm, bn=bn, bk=bk,
+                          interpret=interpret_mode())
 
 
 def rel_err(a, b) -> float:
-    return _re.rel_err_fused(a, b, interpret=INTERPRET)
+    return _re.rel_err_fused(a, b, interpret=interpret_mode())
+
+
+def packed_sq_norms(a_flat, b_flat, seg_ids, counts, n_segments,
+                    block=_re.DEFAULT_BLOCK):
+    """Packed segmented (||a-b||^2, ||a||^2) over N pairs in one launch."""
+    return _re.packed_sq_norms(a_flat, b_flat, seg_ids, counts,
+                               n_segments=n_segments, block=block,
+                               interpret=interpret_mode())

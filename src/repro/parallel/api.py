@@ -36,6 +36,20 @@ from repro.parallel.gpt import parallel_gpt_loss
 from repro.parallel.layers import permute_from_zigzag, permute_to_zigzag
 from repro.parallel.zero import zero1_update
 
+try:                               # jax >= 0.6: top-level, check_vma kwarg
+    from jax import shard_map as _shard_map
+    _SM_CHECK_KW = "check_vma"
+except ImportError:                # jax 0.4.x: experimental, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SM_CHECK_KW = "check_rep"
+
+
+def shard_map_unchecked(f, mesh, in_specs, out_specs):
+    """shard_map with replication/VMA checking off, across jax versions."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_SM_CHECK_KW: False})
+
+
 MESH_AXES = {"dp": "dp", "cp": "cp", "tp": "tp", "sp": "tp"}
 
 
@@ -316,9 +330,9 @@ def make_candidate_runner(cfg: ArchConfig, pcfg: ParallelConfig,
             ti.clear()
             ti.update({k: (v.shape, v.dtype) for k, v in ctx.fwd.items()})
             return jnp.zeros(())
-        jax.eval_shape(jax.shard_map(
+        jax.eval_shape(shard_map_unchecked(
             body_d, mesh=mesh, in_specs=(param_specs_tree, batch_spec),
-            out_specs=P(), check_vma=False), params, b)
+            out_specs=P()), params, b)
         names = list(ti)
         pspecs = {n: spec_to_pspec(ann.act_spec(n), len(ti[n][0]), pcfg)
                   for n in names}
@@ -348,12 +362,11 @@ def make_candidate_runner(cfg: ArchConfig, pcfg: ParallelConfig,
                     v, NamedSharding(mesh, pspecs[n]))
         rew_specs = {n: pspecs[n] for n in rew_in}
 
-        sm = jax.shard_map(
+        sm = shard_map_unchecked(
             body, mesh=mesh,
             in_specs=(param_specs_tree, batch_spec, probe_specs, rew_specs),
             out_specs=(P(), pspecs, param_specs_tree,
-                       {n: pspecs[n] for n in probes}),
-            check_vma=False)
+                       {n: pspecs[n] for n in probes}))
         fn = jax.jit(sm) if jit else sm
         loss, taps, pgt, ag = fn(params, b, probes, rew_in)
 
@@ -365,10 +378,11 @@ def make_candidate_runner(cfg: ArchConfig, pcfg: ParallelConfig,
 
         tr = Trace()
         tr.loss = float(loss)
-        tr.activations = {n: np.asarray(unzig(n, taps[n])) for n in names}
-        tr.act_grads = {n: np.asarray(unzig(n, ag[n])) for n in names
-                        if n in ag}
-        pg_named = {k: from_candidate_layout(k, np.asarray(v))
+        # leaves stay device-resident jax.Arrays — the batched checker reads
+        # them in place and only reduction scalars reach the host
+        tr.activations = {n: unzig(n, taps[n]) for n in names}
+        tr.act_grads = {n: unzig(n, ag[n]) for n in names if n in ag}
+        pg_named = {k: from_candidate_layout(k, v)
                     for k, v in flatten_named(pgt).items()}
         tr.param_grads = dict(pg_named)
         tr.meta["fwd_order"] = names
@@ -384,10 +398,8 @@ def make_candidate_runner(cfg: ArchConfig, pcfg: ParallelConfig,
                                               st, pcfg.dp, bugs)
             else:
                 new_p, _, info = opt.update(ref_params, grads_tree, st)
-            tr.main_grads = {k: np.asarray(v) for k, v in
-                             flatten_named(info.main_grads).items()}
-            tr.params_post = {k: np.asarray(v) for k, v in
-                              flatten_named(new_p).items()}
+            tr.main_grads = flatten_named(info.main_grads)
+            tr.params_post = flatten_named(new_p)
             tr.grad_norm = float(info.grad_norm)
         return tr
 
@@ -437,10 +449,10 @@ def make_plain_train_step(cfg: ArchConfig, pcfg: ParallelConfig,
             rloss = jax.lax.psum(rloss, loss_axes) / (pcfg.dp * pcfg.cp)
         return rloss, unflatten_named(pg, grads)
 
-    sm = jax.shard_map(body, mesh=mesh,
-                       in_specs=(spec_tree, {"tokens": bspec,
-                                             "labels": bspec}),
-                       out_specs=(P(), spec_tree), check_vma=False)
+    sm = shard_map_unchecked(body, mesh=mesh,
+                             in_specs=(spec_tree, {"tokens": bspec,
+                                                   "labels": bspec}),
+                             out_specs=(P(), spec_tree))
 
     opt_state = opt.init(params)
 

@@ -22,8 +22,11 @@ AX_DP, AX_CP, AX_TP = "dp", "cp", "tp"
 
 
 def axis_size(name):
+    # jax.lax.axis_size only exists on newer jax; psum of the python scalar
+    # 1 is the version-stable spelling — it folds to the static axis size
+    # without tracing
     try:
-        return jax.lax.axis_size(name)
+        return jax.lax.psum(1, name)
     except NameError:
         return 1
 

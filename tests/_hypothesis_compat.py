@@ -1,0 +1,99 @@
+"""Minimal stand-in for ``hypothesis`` when it isn't installed.
+
+This container has no route to PyPI, so the property-test modules import
+through::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+
+The shim runs each ``@given`` test over a small deterministic example set:
+the strategy's boundary values first, then seeded pseudo-random draws up to
+``max_examples``.  It covers exactly the hypothesis surface this repo uses
+(``integers``, ``floats``, ``sampled_from``, ``booleans``; ``settings`` with
+``max_examples``/``deadline``) — no shrinking, no database, no phases.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import math
+import random
+
+
+class _Strategy:
+    def __init__(self, sample, edges=()):
+        self._sample = sample
+        self.edges = list(edges)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                         edges=[min_value, max_value])
+
+    @staticmethod
+    def floats(min_value, max_value):
+        def sample(rng):
+            if min_value > 0 and max_value / min_value > 100:
+                # span crosses decades -> log-uniform, like hypothesis tends
+                # to explore magnitudes
+                return math.exp(rng.uniform(math.log(min_value),
+                                            math.log(max_value)))
+            return rng.uniform(min_value, max_value)
+        return _Strategy(sample, edges=[min_value, max_value])
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements), edges=elements)
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5,
+                         edges=[False, True])
+
+
+st = strategies
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._compat_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # read settings at CALL time: @settings may sit above OR below
+            # @given (both orders are valid hypothesis), i.e. the attribute
+            # may land on `fn` or on `wrapper` itself
+            max_examples = (getattr(wrapper, "_compat_settings", None)
+                            or getattr(fn, "_compat_settings", None)
+                            or {}).get("max_examples", 10)
+            rng = random.Random(0x7735ACE)
+            names = list(strats)
+            examples = []
+            n_edges = max((len(strats[n].edges) for n in names), default=0)
+            for i in range(n_edges):
+                examples.append({
+                    n: (strats[n].edges[i % len(strats[n].edges)]
+                        if strats[n].edges else strats[n]._sample(rng))
+                    for n in names})
+            while len(examples) < max_examples:
+                examples.append({n: strats[n]._sample(rng) for n in names})
+            for ex in examples[:max_examples]:
+                fn(*args, **ex, **kwargs)
+
+        # hide the strategy-filled parameters from pytest's fixture
+        # resolution (hypothesis does the same via its own wrapper)
+        params = [p for p in inspect.signature(fn).parameters.values()
+                  if p.name not in strats]
+        wrapper.__signature__ = inspect.Signature(params)
+        return wrapper
+    return deco

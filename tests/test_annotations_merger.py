@@ -1,7 +1,10 @@
 """Shard specs, slicing, and the tensor merger (paper §4.1, Fig 6)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # no PyPI route in CI image
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.annotations import (Annotations, ShardSpec, slices_for_rank)
 from repro.core.generator import extract_shard, generate, perturb

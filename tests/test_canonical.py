@@ -1,6 +1,9 @@
 """Canonical id + PP/VPP layer-index mapping (paper §4.1, Fig 5)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # no PyPI route in CI image
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.canonical import (CanonicalId, canonical_layer_index,
                                   canonicalize_module, chunk_layers,

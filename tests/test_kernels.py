@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # no PyPI route in CI image
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # no PyPI route in CI image
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs.base import get_config
 from repro.checkpoint.store import load_checkpoint, save_checkpoint
