@@ -24,7 +24,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: bug_table,curves,fp8,overhead,kernels,"
-                         "checker,roofline")
+                         "checker,supervisor,roofline")
     ap.add_argument("--roofline", action="store_true",
                     help="include the (slow, 512-device) roofline sweep")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -44,6 +44,9 @@ def main() -> None:
     if on("checker"):
         from benchmarks import checker_bench
         _safe(checker_bench.run, failures, "checker")
+    if on("supervisor"):
+        from benchmarks import supervisor_bench
+        _safe(supervisor_bench.run, failures, "supervisor")
     if on("fp8"):
         from benchmarks import fp8_smoothness
         _safe(fp8_smoothness.run, failures, "fp8")

@@ -1,0 +1,50 @@
+"""Supervisor overhead benchmark: supervised steps/s vs the unsupervised
+training loop (ISSUE 2 acceptance: async within 2x of unsupervised and
+strictly better than check-every-step sync).
+
+Writes ``BENCH_supervisor.json`` mapping row name -> microseconds per step:
+
+* ``supervisor/plain``        — bare distributed candidate step (context:
+  what production training costs without any supervision);
+* ``supervisor/nocheck``      — the supervisor's lockstep loop with
+  checking off (the unsupervised-loop baseline: reference + candidate
+  traced steps, no differential checks);
+* ``supervisor/sync``         — supervised, ``async_window=0`` (block on
+  every check);
+* ``supervisor/async2``       — supervised, 2-deep async check window;
+* ``supervisor/async2_spill`` — same plus the spill-to-disk trace ring.
+"""
+from __future__ import annotations
+
+from benchmarks.common import ROWS, emit, run_worker, write_json
+
+
+def run(json_path: str = "BENCH_supervisor.json"):
+    out = run_worker("benchmarks.supervisor_worker", devices=8, timeout=3600)
+    kv = dict(ln.split("\t") for ln in out.strip().splitlines() if "\t" in ln)
+    plain = float(kv["plain_s_per_step"])
+    nocheck = float(kv["nocheck_s_per_step"])
+    sync_s = float(kv["sync_s_per_step"])
+    async_s = float(kv["async_s_per_step"])
+    spill_s = float(kv["async_spill_s_per_step"])
+    first_row = len(ROWS)
+    emit("supervisor/plain", plain * 1e6, "bare candidate step")
+    emit("supervisor/nocheck", nocheck * 1e6,
+         f"lockstep ref+cand, checking off ({nocheck / plain:.2f}x plain)")
+    emit("supervisor/sync", sync_s * 1e6,
+         f"{sync_s / nocheck:.2f}x unsupervised loop")
+    emit("supervisor/async2", async_s * 1e6,
+         f"{async_s / nocheck:.2f}x unsupervised loop; "
+         f"{sync_s / async_s:.2f}x faster than sync")
+    emit("supervisor/async2_spill", spill_s * 1e6,
+         f"spill ring cost {(spill_s - async_s) * 1e3:+.1f} ms/step")
+    write_json(json_path, rows=ROWS[first_row:])
+    ok = async_s <= 2.0 * nocheck and async_s < sync_s
+    emit("supervisor/acceptance", 0.0,
+         f"{'PASS' if ok else 'FAIL'}: async2 <= 2x unsupervised loop "
+         f"and async2 < sync")
+    return kv
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,95 @@
+"""Worker (8 forced host devices): supervisor overhead vs an unsupervised
+training loop.
+
+Four loops over the same (arch, parallelism, batch stream):
+
+* ``plain``   — the bare distributed candidate train step: no tracing, no
+  reference, no checking (what production training costs);
+* ``nocheck`` — the supervisor's lockstep loop with checking off: reference
+  + candidate traced steps, no differential checks (the "unsupervised
+  loop" the overhead criterion compares against — training both sides is
+  the floor the checking policy sits on);
+* ``sync``    — supervised run with ``async_window=0``: every step blocks
+  on its own differential check before the next step dispatches;
+* ``async``   — supervised run with a 2-deep in-flight check window (the
+  double-buffered pipeline).
+
+Prints ``key\tvalue`` TSV of steady-state (post-compilation) seconds/step.
+Spill is disabled for all timed runs so the rows compare checking policies,
+not disk bandwidth; a fourth row times the default spill-enabled ring for
+reference.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+import time
+
+import jax
+
+from repro.configs.base import get_config
+from repro.data.synthetic import make_batch
+from repro.models.model import Model
+from repro.optim.adamw import AdamW
+from repro.parallel.api import ParallelConfig, make_plain_train_step
+from repro.supervise import Supervisor, SuperviseConfig
+
+STEPS = 18
+WARM = 2
+BATCH, SEQ = 4, 32
+
+
+def main():
+    cfg = dataclasses.replace(get_config("gpt-paper").reduced(),
+                              n_layers=2, vocab=512, tie_embeddings=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pcfg = ParallelConfig(dp=2, tp=2)
+
+    # --- unsupervised plain candidate loop ---------------------------------
+    opt = AdamW(lr=1e-3)
+    step_fn, prep, p, s = make_plain_train_step(cfg, pcfg, params, opt)
+    loss = None
+    for k in range(WARM):
+        p, s, loss = step_fn(p, s, prep(make_batch(cfg, BATCH, SEQ, step=k)))
+    loss.block_until_ready()
+    t0 = time.perf_counter()
+    for k in range(WARM, WARM + STEPS):
+        p, s, loss = step_fn(p, s, prep(make_batch(cfg, BATCH, SEQ, step=k)))
+    loss.block_until_ready()
+    plain = (time.perf_counter() - t0) / STEPS
+    print(f"plain_s_per_step\t{plain:.6f}")
+
+    # --- supervised runs ----------------------------------------------------
+    def supervised(window: int, spill: bool, check_every: int = 1):
+        sup = Supervisor(
+            model, cfg, pcfg, AdamW(lr=1e-3), params=params,
+            scfg=SuperviseConfig(steps=WARM + STEPS, async_window=window,
+                                 check_every=check_every,
+                                 spill=spill, ring_window=4,
+                                 ckpt_every=WARM + STEPS,
+                                 stop_on_flag=False),
+            batch_size=BATCH, seq_len=SEQ)
+        res = sup.run()
+        assert res.passed, ("clean supervised run flagged:\n"
+                            + res.summary())
+        return 1.0 / res.timings["steady_steps_per_s"]
+
+    # checking off: only the (unavoidable) step-0 check runs, in warmup
+    nocheck = supervised(window=2, spill=False,
+                         check_every=2 * (WARM + STEPS))
+    print(f"nocheck_s_per_step\t{nocheck:.6f}")
+    sync_s = supervised(window=0, spill=False)
+    print(f"sync_s_per_step\t{sync_s:.6f}")
+    async_s = supervised(window=2, spill=False)
+    print(f"async_s_per_step\t{async_s:.6f}")
+    spill_s = supervised(window=2, spill=True)
+    print(f"async_spill_s_per_step\t{spill_s:.6f}")
+    print(f"async_overhead_x\t{async_s / nocheck:.3f}")
+    print(f"sync_overhead_x\t{sync_s / nocheck:.3f}")
+
+
+if __name__ == "__main__":
+    main()

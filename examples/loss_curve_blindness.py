@@ -67,3 +67,16 @@ res = ttrace_check(make_model_runner(model, params, opt, opt.init(params)),
 print(f"TTrace: ONE iteration in {time.time()-t0:.1f}s -> "
       f"{'detected the bug' if not res.passed else 'no bug?!'} "
       f"({len(res.report.flagged)} tensors flagged)")
+
+# the streaming supervisor rides along with the SAME run and names the step
+from repro.supervise import Supervisor, SuperviseConfig
+
+t0 = time.time()
+sup = Supervisor(model, cfg, pcfg, AdamW(lr=3e-3), params=params,
+                 scfg=SuperviseConfig(steps=min(STEPS, 8)),
+                 batch_size=4, seq_len=32)
+sres = sup.run()
+print(f"supervisor: online over the same run in {time.time()-t0:.1f}s -> "
+      f"first flagged step {sres.first_flagged_step}, first bad step "
+      f"{sres.first_bad_step} (localized: {sres.localized_module}) — "
+      f"the loss curve was still within {gap*100:.2f}% after {STEPS} steps")

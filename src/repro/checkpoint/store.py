@@ -6,6 +6,14 @@ holds it, so restores work regardless of the host count that wrote the
 checkpoint.  Leaves larger than ``shard_bytes`` are split along axis 0 into
 multiple entries (the single-controller analogue of per-rank checkpoint
 shards).
+
+Restores are round-trip exact for every dtype the training stack uses:
+exotic dtypes (bf16, fp8) are stored as raw bytes and re-viewed on load, and
+``load_checkpoint`` re-establishes each leaf's device placement from the
+template tree — a leaf restored against a sharded ``jax.Array`` template
+comes back on the same mesh with the same ``NamedSharding``, not as a
+host-default array (the supervisor's bisection replay depends on this
+being exact).
 """
 from __future__ import annotations
 
@@ -20,6 +28,16 @@ import numpy as np
 from repro.core.collector import flatten_named, unflatten_named
 
 MANIFEST = "manifest.json"
+
+# numpy-native dtypes that np.savez round-trips by itself; anything else
+# (bf16, fp8, ...) is stored as raw bytes and re-viewed on load
+_NATIVE_DTYPES = ("float64", "float32", "float16", "int64", "int32", "int16",
+                  "int8", "uint8", "uint16", "uint32", "uint64", "bool")
+
+
+def _as_bytes(piece: np.ndarray) -> np.ndarray:
+    """View an exotic-dtype piece as uint8 (0-d safe: reshape first)."""
+    return np.ascontiguousarray(piece).reshape(-1).view(np.uint8)
 
 
 def save_checkpoint(path: str, tree, *, step: int = 0,
@@ -46,17 +64,12 @@ def save_checkpoint(path: str, tree, *, step: int = 0,
                  "pieces": []}
         chunks = ([arr] if arr.ndim == 0
                   else np.array_split(arr, pieces, axis=0))
+        exotic = arr.dtype.kind == "V" or arr.dtype.name not in _NATIVE_DTYPES
         for i, piece in enumerate(chunks):
             key = f"{name}::{i}"
             if cur_bytes + piece.nbytes > shard_bytes:
                 flush()
-            # store exotic dtypes (bf16, fp8) as raw bytes; dtype is in the
-            # manifest and restored on load
-            cur[key] = piece.view(np.uint8) if piece.dtype.kind == "V" or \
-                piece.dtype.name not in ("float64", "float32", "float16",
-                                         "int64", "int32", "int16", "int8",
-                                         "uint8", "uint16", "uint32",
-                                         "uint64", "bool") else piece
+            cur[key] = _as_bytes(piece) if exotic else piece
             cur_bytes += piece.nbytes
             entry["pieces"].append({"file": f"shard_{shard_id:05d}.npz",
                                     "key": key})
@@ -67,7 +80,14 @@ def save_checkpoint(path: str, tree, *, step: int = 0,
     return manifest
 
 
-def load_checkpoint(path: str, template):
+def load_checkpoint_named(path: str) -> tuple[dict[str, np.ndarray], int,
+                                              dict]:
+    """Template-free restore: ``(flat {name: numpy leaf}, step, extra)``.
+
+    Leaves come back as host numpy with the manifest dtype (bf16/fp8 raw
+    bytes re-viewed); placement is the caller's concern — ``load_checkpoint``
+    layers template-driven ``jax.Array`` placement on top of this.
+    """
     with open(os.path.join(path, MANIFEST)) as f:
         manifest = json.load(f)
     files: dict[str, np.lib.npyio.NpzFile] = {}
@@ -80,13 +100,54 @@ def load_checkpoint(path: str, template):
     named = {}
     for name, entry in manifest["leaves"].items():
         pieces = [npz(p["file"])[p["key"]] for p in entry["pieces"]]
-        arr = pieces[0] if len(pieces) == 1 else np.concatenate(pieces, 0)
         want = np.dtype(entry["dtype"])
-        if arr.dtype != want:
-            if arr.dtype == np.uint8:      # raw-byte exotic dtype
-                arr = arr.reshape(-1).view(want).reshape(entry["shape"])
-            else:
+        if pieces[0].dtype == np.uint8 and want != np.uint8:
+            # raw-byte exotic dtype: re-view each piece, then stitch
+            pieces = [p.reshape(-1).view(want) for p in pieces]
+            arr = (pieces[0] if len(pieces) == 1
+                   else np.concatenate(pieces)).reshape(entry["shape"])
+        else:
+            arr = (pieces[0] if len(pieces) == 1
+                   else np.concatenate(pieces, 0))
+            if arr.dtype != want:
                 arr = arr.astype(want)
-        named[name] = jnp.asarray(arr)
-    tree = unflatten_named(named, template)
-    return tree, manifest["step"], manifest.get("extra", {})
+            arr = arr.reshape(entry["shape"])
+        named[name] = arr
+    return named, manifest["step"], manifest.get("extra", {})
+
+
+def _place_like(arr: np.ndarray, template_leaf):
+    """Re-establish the template leaf's device placement and dtype class.
+
+    * template is a ``jax.Array``: ``device_put`` onto its sharding (mesh
+      placement preserved for distributed state) with the CHECKPOINT dtype —
+      the checkpoint is the source of truth for values/dtype, the template
+      for placement;
+    * template is anything else (numpy, python scalar): plain ``jnp.asarray``.
+    """
+    sharding = getattr(template_leaf, "sharding", None)
+    if sharding is not None:
+        devs = getattr(sharding, "device_set", None) or set()
+        default = jax.devices()[0]
+        if len(devs) == 1 and next(iter(devs)) == default:
+            # plain default-device template: restore UNcommitted (like a
+            # fresh jnp.asarray) so downstream jits remain free to place it
+            # — committing here would pin mixed-device computations
+            return jnp.asarray(arr)
+        return jax.device_put(jnp.asarray(arr), sharding)
+    return jnp.asarray(arr)
+
+
+def load_checkpoint(path: str, template):
+    """Restore a pytree saved by ``save_checkpoint``.
+
+    Every leaf comes back as a ``jax.Array`` with the checkpointed dtype and
+    the TEMPLATE leaf's device placement/sharding — round-trip exact for
+    bf16/fp8 leaves and for sharded distributed state.
+    """
+    named, step, extra = load_checkpoint_named(path)
+    tmpl_named = flatten_named(template)
+    placed = {name: _place_like(arr, tmpl_named.get(name))
+              for name, arr in named.items()}
+    tree = unflatten_named(placed, template)
+    return tree, step, extra

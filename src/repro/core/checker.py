@@ -14,8 +14,11 @@ import numpy as np
 
 from repro.core import canonical as C
 from repro.core.collector import Trace
-from repro.core.relerr_engine import batched_rel_err
+from repro.core.relerr_engine import _to_rel_err, section_sq_norms
 from repro.core.thresholds import Thresholds
+
+DEFAULT_KINDS = (C.KIND_ACT, C.KIND_ACT_GRAD, C.KIND_PARAM_GRAD,
+                 C.KIND_MAIN_GRAD, C.KIND_PARAM_POST)
 
 
 @dataclass
@@ -77,35 +80,66 @@ def _module_of(name: str) -> str:
     return name.rsplit("/", 1)[0] if "/" in name else name
 
 
-def compare_traces(ref: Trace, cand: Trace, thr: Thresholds,
-                   kinds=(C.KIND_ACT, C.KIND_ACT_GRAD, C.KIND_PARAM_GRAD,
-                          C.KIND_MAIN_GRAD, C.KIND_PARAM_POST)) -> Report:
-    rep = Report()
+def collect_section_pairs(ref: Trace, cand: Trace, kinds=DEFAULT_KINDS):
+    """Pass 1 of a differential check — metadata only, NO host transfer.
+
+    Walks the requested sections of both traces and returns
+    ``(entries, leaves_ref, leaves_cand, missing)`` where ``entries`` is an
+    ordered list of ``(kind, name, note)``: ``note is None`` marks a
+    comparable pair (its leaves appear, in order, in the two leaf lists)
+    and a non-None note records a shape mismatch (flagged unconditionally).
+    Shapes come from the stored leaves without materializing numpy, so this
+    pass is free to run on the training hot path; the reduction itself
+    (pass 2) can then be dispatched on device and resolved later — the
+    contract the async supervisor pipeline builds on.
+    """
+    entries: list[tuple[str, str, Optional[str]]] = []
+    leaves_ref, leaves_cand, missing = [], [], []
     for kind in kinds:
         rs, cs = ref.section(kind), cand.section(kind)
-        # pass 1 — metadata only (shapes come from the leaves without any
-        # host transfer); pass 2 — ONE batched device reduction per section.
-        entries: list[tuple[str, Optional[str]]] = []
-        names = []
         for name in rs:
             if name not in cs:
-                rep.missing.append(f"{kind}:{name} missing from candidate")
+                missing.append(f"{kind}:{name} missing from candidate")
                 continue
             sa, sb = rs.shape_of(name), cs.shape_of(name)
             if sa != sb:
-                entries.append((name, f"shape {sb} != ref {sa}"))
+                entries.append((kind, name, f"shape {sb} != ref {sa}"))
                 continue
-            entries.append((name, None))
-            names.append(name)
-        errs = batched_rel_err(rs, cs, names)
-        for name, mismatch in entries:
-            if mismatch is not None:
-                rep.records.append(CheckRecord(
-                    kind, name, float("inf"), 0.0, True, note=mismatch))
-                continue
-            e = errs[name]
-            t = thr.threshold(kind, name)
-            rep.records.append(CheckRecord(kind, name, e, t, e > t))
+            entries.append((kind, name, None))
+            leaves_ref.append(rs.raw(name))
+            leaves_cand.append(cs.raw(name))
+    return entries, leaves_ref, leaves_cand, missing
+
+
+def report_from_errs(entries, errs, thr: Thresholds, missing=(),
+                     thr_scale: float = 1.0) -> Report:
+    """Pass 2 of a differential check: fold per-pair relative errors back
+    into a ``Report`` (records in section order) and localize.
+
+    ``errs`` is an iterable of rel-errs aligned with the comparable
+    (note-is-None) entries of ``collect_section_pairs``.  ``thr_scale``
+    widens thresholds — a float applies uniformly, a ``{kind: float}``
+    mapping per trace kind; the supervisor's per-step drift allowance for
+    multi-step runs, 1.0 for the single-step check.
+    """
+    rep = Report()
+    rep.missing.extend(missing)
+    it = iter(errs)
+    for kind, name, mismatch in entries:
+        if mismatch is not None:
+            rep.records.append(CheckRecord(
+                kind, name, float("inf"), 0.0, True, note=mismatch))
+            continue
+        e = float(next(it))
+        scale = (thr_scale.get(kind, 1.0) if isinstance(thr_scale, dict)
+                 else thr_scale)
+        t = thr.threshold(kind, name) * scale
+        rep.records.append(CheckRecord(kind, name, e, t, e > t))
+    _localize_propagation(rep)
+    return rep
+
+
+def _localize_propagation(rep: Report) -> None:
     # propagation-order localization: the first flagged forward activation is
     # the earliest module whose computation diverged (paper §3 step 4).
     first = rep.first_flagged_activation()
@@ -121,6 +155,8 @@ def compare_traces(ref: Trace, cand: Trace, thr: Thresholds,
                   if r.kind == C.KIND_ACT_GRAD and r.flagged]
         pgrads = [r for r in rep.records
                   if r.kind == C.KIND_PARAM_GRAD and r.flagged]
+        mgrads = [r for r in rep.records
+                  if r.kind == C.KIND_MAIN_GRAD and r.flagged]
         if agrads:
             rep.localized = _module_of(agrads[-1].name)
             rep.localization_mode = "backward"
@@ -132,10 +168,29 @@ def compare_traces(ref: Trace, cand: Trace, thr: Thresholds,
             head, _, leaf = name.rpartition(".")
             rep.localized = head if leaf in ("w", "b") else name
             rep.localization_mode = "backward"
-        else:
-            rep.localized = _module_of(rep.flagged[0].name)
+        elif mgrads:
+            # fp32 main grads wrong but raw grads fine: the optimizer-side
+            # processing of that parameter's gradient is at fault
+            rep.localized = _module_of(mgrads[0].name)
             rep.localization_mode = "optimizer"
-    return rep
+        else:
+            # ONLY post-step params flagged: forward, backward and the main
+            # grads all agree — the parameter update itself is wrong (stale
+            # ZeRO gathers, skipped partitions, ...)
+            rep.localized = "optimizer"
+            rep.localization_mode = "optimizer"
+    return None
+
+
+def compare_traces(ref: Trace, cand: Trace, thr: Thresholds,
+                   kinds=DEFAULT_KINDS, thr_scale: float = 1.0) -> Report:
+    """Differential check of two traces (paper §3 step 4): one metadata pass,
+    then ONE batched device reduction over every comparable pair of every
+    requested section, then threshold comparison + localization."""
+    entries, la, lb, missing = collect_section_pairs(ref, cand, kinds)
+    errs = _to_rel_err(section_sq_norms(la, lb))
+    return report_from_errs(entries, errs, thr, missing=missing,
+                            thr_scale=thr_scale)
 
 
 def localize_with_rewrites(run_ref, run_cand, batch, ref_trace: Trace,

@@ -249,6 +249,59 @@ def trace_fn_step(loss_call, params, batch, opt=None, opt_state=None,
 
 
 # ---------------------------------------------------------------------------
+# Once-compiled stateful trace step (the supervisor's lockstep contract)
+# ---------------------------------------------------------------------------
+
+def make_trace_step(loss_call, opt, params, batch,
+                    collect_act_grads: bool = True, tap_filter=None,
+                    jit: bool = True):
+    """Build a trace-collecting FULL train step compiled exactly once.
+
+    ``trace_train_step`` re-traces every call (fresh closures -> fresh jit
+    cache entries); a multi-step supervised run cannot afford that.  This
+    builder runs tap discovery once against the template ``(params, batch)``
+    shapes and returns ``step(params, opt_state, batch) -> (Trace,
+    new_params, new_opt_state)`` backed by a single jitted callable —
+    every subsequent same-shaped call is a cache hit.
+
+    The returned Trace's sections are lazily device-resident (collector
+    contract) and ``trace.loss`` / ``trace.grad_norm`` are left as device
+    scalars so the caller's pipeline is never forced to synchronize.
+    """
+    shapes, fwd_order = tap_shapes(loss_call, params, batch, None)
+    probes = _make_probes(shapes, tap_filter, collect_act_grads)
+
+    def _step(p, st, b, pr):
+        def loss_fn(pp, prr):
+            ctx = TraceContext("collect", probes=prr, rewrites={})
+            loss = loss_call(pp, b, ctx)
+            return loss, ctx.fwd
+        (loss, fwd), (pgrads, agrads) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(p, pr)
+        new_p, new_st, info = opt.update(p, pgrads, st)
+        return (loss, fwd, pgrads, agrads, new_p, new_st,
+                info.main_grads, info.grad_norm)
+
+    step_c = jax.jit(_step) if jit else _step
+
+    def step(p, st, b):
+        (loss, fwd, pgrads, agrads, new_p, new_st,
+         main_grads, grad_norm) = step_c(p, st, b, probes)
+        tr = Trace()
+        tr.loss = loss
+        tr.grad_norm = grad_norm
+        tr.activations = {k: fwd[k] for k in fwd_order}
+        tr.act_grads = {k: agrads[k] for k in fwd_order if k in agrads}
+        tr.param_grads = flatten_named(pgrads)
+        tr.main_grads = flatten_named(main_grads)
+        tr.params_post = flatten_named(new_p)
+        tr.meta["fwd_order"] = list(fwd_order)
+        return tr, new_p, new_st
+
+    return step
+
+
+# ---------------------------------------------------------------------------
 # Fused pair collector (threshold estimation in one compiled call)
 # ---------------------------------------------------------------------------
 

@@ -109,6 +109,26 @@ def make_decode_runner(model, params, decode_fn=None, taps_every: int = 1):
     return run
 
 
+def ttrace_supervise(model, cfg, pcfg, opt, params=None, steps: int = 8,
+                     batch_fn: Optional[Callable] = None, **kwargs):
+    """Multi-step analogue of ``ttrace_check``: run reference and candidate
+    training loops in lockstep for ``steps`` steps with online (async)
+    checking, and on a flag bisect to the first bad step and localize.
+
+    Thin facade over ``repro.supervise.Supervisor`` — ``kwargs`` map onto
+    ``SuperviseConfig`` fields (``check_every``, ``async_window``,
+    ``ckpt_every``, ...) plus ``batch_size``/``seq_len``/``log_fn`` for the
+    default synthetic batch stream.  Returns a ``SuperviseResult`` whose
+    ``summary()``/``passed``/``localized_module`` mirror ``TTraceResult``.
+    """
+    from repro.supervise import Supervisor, SuperviseConfig
+    sup_kw = {k: kwargs.pop(k) for k in ("batch_size", "seq_len", "log_fn")
+              if k in kwargs}
+    scfg = SuperviseConfig(steps=steps, **kwargs)
+    return Supervisor(model, cfg, pcfg, opt, params=params, scfg=scfg,
+                      batch_fn=batch_fn, **sup_kw).run()
+
+
 def ttrace_check(reference: Callable, candidate: Callable, batch: dict,
                  eps: float = MACHINE_EPS["float32"], margin: float = 8.0,
                  localize: bool = True, seed: int = 0,

@@ -180,6 +180,32 @@ def section_sq_norms(leaves_a, leaves_b, mode: str | None = None
     raise ValueError(f"unknown rel-err engine mode {mode!r}")
 
 
+def sq_norms_async(leaves_a, leaves_b):
+    """Dispatch the per-pair ``(||a-b||^2, ||a||^2)`` reduction and return
+    the DEVICE ``(N, 2)`` array **without synchronizing**.
+
+    This is the async-checking entry point: the caller keeps the returned
+    ``jax.Array`` as a future (JAX dispatch is asynchronous on every
+    backend) and materializes it later with ``np.asarray`` — training steps
+    dispatched in between overlap with the reduction.  On TPU the packed
+    segmented Pallas kernel runs; elsewhere the fused one-dispatch XLA
+    reduction.  (The CPU BLAS executor is intentionally NOT used here: it
+    computes on the caller's thread, which is exactly the synchronization
+    async checking exists to avoid.)
+    """
+    if not leaves_a:
+        return jnp.zeros((0, 2), jnp.float32)
+    if jax.default_backend() == "tpu":
+        from repro.kernels import ops
+        a_flat, b_flat, seg_ids, counts = pack_device(
+            [jnp.asarray(x) for x in leaves_a],
+            [jnp.asarray(x) for x in leaves_b])
+        return ops.packed_sq_norms(a_flat, b_flat, seg_ids, counts,
+                                   n_segments=len(leaves_a))
+    return _fused_pair_sq_norms([jnp.asarray(x) for x in leaves_a],
+                                [jnp.asarray(x) for x in leaves_b])
+
+
 def _to_rel_err(sq: np.ndarray) -> np.ndarray:
     d = np.sqrt(sq[:, 0])
     na = np.sqrt(sq[:, 1])

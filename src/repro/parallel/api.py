@@ -224,6 +224,32 @@ def reduce_act_grads(ag: dict, ann: Annotations, pcfg: ParallelConfig, bugs):
 
 
 # ---------------------------------------------------------------------------
+# Compiled-step caches
+# ---------------------------------------------------------------------------
+#
+# make_candidate_runner used to rebuild (and re-trace) a fresh shard_map per
+# call; every TTrace check paid full tracing + compilation again.  Both the
+# tap-discovery result and the jitted step are pure functions of
+# (ArchConfig, ParallelConfig, input signature), so they are cached at module
+# level keyed on exactly that — repeated runner builds (and the supervisor's
+# bisection replays) reuse one compiled step per side.
+
+_TAP_CACHE: dict = {}     # (cfg, pcfg, psig, bsig) -> (names, ti)
+_STEP_CACHE: dict = {}    # + (probe names, rewrite names, jit) -> callable
+
+
+def _abstract_sig(named: dict) -> tuple:
+    return tuple((n, tuple(np.shape(v)), str(jnp.result_type(v)))
+                 for n, v in sorted(named.items()))
+
+
+def clear_step_cache():
+    """Drop cached compiled candidate steps (tests / mesh reconfiguration)."""
+    _TAP_CACHE.clear()
+    _STEP_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
 # Runner
 # ---------------------------------------------------------------------------
 
@@ -243,103 +269,115 @@ def qkv_permutation(cfg: ArchConfig, tp: int) -> np.ndarray:
                            for r in range(tp)])
 
 
-def make_candidate_runner(cfg: ArchConfig, pcfg: ParallelConfig,
-                          ref_params: dict, opt=None, opt_state=None,
-                          jit: bool = True):
-    """Build ``runner(batch, rewrites) -> Trace`` for the distributed GPT."""
-    mesh = make_device_mesh(pcfg)
-    ann = build_annotations(cfg, pcfg)
-    bugs = pcfg.bugs
-
-    # --- reference->candidate parameter layout mapping (fused QKV) ----------
-    perm = qkv_permutation(cfg, pcfg.tp)
+def layout_maps(cfg: ArchConfig, tp: int):
+    """``(to_candidate, from_candidate)`` leaf mappers over the QKV layout
+    permutation — the single source of the reference<->candidate parameter
+    layout for the one-shot runner AND the supervisor's train step."""
+    perm = qkv_permutation(cfg, tp)
     inv_perm = np.argsort(perm)
 
-    def to_candidate_layout(name, leaf):
+    def to_candidate(name, leaf):
         if name.endswith("linear_qkv.w"):
             return leaf[:, perm]
         if name.endswith("linear_qkv.b"):
             return leaf[perm]
         return leaf
 
-    def from_candidate_layout(name, leaf):
+    def from_candidate(name, leaf):
         if name.endswith("linear_qkv.w"):
             return leaf[:, inv_perm]
         if name.endswith("linear_qkv.b"):
             return leaf[inv_perm]
         return leaf
 
-    named_params = {n: to_candidate_layout(n, l)
-                    for n, l in flatten_named(ref_params).items()}
+    return to_candidate, from_candidate
 
-    def param_pspec(name, leaf):
-        return spec_to_pspec(ann.param_spec(name), leaf.ndim, pcfg)
 
-    # shard the (layout-mapped) reference params onto the mesh
-    sharded = {}
-    for name, leaf in named_params.items():
-        sh = NamedSharding(mesh, param_pspec(name, leaf))
-        sharded[name] = jax.device_put(leaf, sh)
-    params = unflatten_named(sharded, ref_params)
-    param_specs_tree = unflatten_named(
-        {n: param_pspec(n, l) for n, l in named_params.items()}, ref_params)
+class _Plumbing:
+    """Everything derived from (cfg, pcfg, params structure) that both
+    candidate step builders share: mesh, annotations, layout mappers,
+    partition specs, the shard_map body, and the zigzag un-permute."""
 
-    bspec = P("dp" if pcfg.dp > 1 else None,
-              "cp" if pcfg.cp > 1 else None)
-    batch_spec = {"tokens": bspec, "labels": bspec}
-    loss_axes = tuple(a for a, n in (("dp", pcfg.dp), ("cp", pcfg.cp))
-                      if n > 1)
+    def __init__(self, cfg: ArchConfig, pcfg: ParallelConfig,
+                 ref_params: dict):
+        self.cfg, self.pcfg = cfg, pcfg
+        self.mesh = make_device_mesh(pcfg)
+        self.ann = build_annotations(cfg, pcfg)
+        self.to_cand, self.from_cand = layout_maps(cfg, pcfg.tp)
+        # the QKV permutation reorders columns but never changes shape, so
+        # candidate-layout abstract shapes == reference shapes
+        named = flatten_named(ref_params)
+        self.param_shapes = {n: jax.ShapeDtypeStruct(tuple(l.shape),
+                                                     jnp.result_type(l))
+                             for n, l in named.items()}
+        self.psig = _abstract_sig(self.param_shapes)
+        self.param_pspecs = {
+            n: spec_to_pspec(self.ann.param_spec(n), l.ndim, pcfg)
+            for n, l in self.param_shapes.items()}
+        self.param_specs_tree = unflatten_named(dict(self.param_pspecs),
+                                                ref_params)
+        self.params_sds = unflatten_named(dict(self.param_shapes),
+                                          ref_params)
+        bspec = P("dp" if pcfg.dp > 1 else None,
+                  "cp" if pcfg.cp > 1 else None)
+        self.batch_spec = {"tokens": bspec, "labels": bspec}
+        self.loss_axes = tuple(a for a, n in (("dp", pcfg.dp),
+                                              ("cp", pcfg.cp)) if n > 1)
 
-    def prep_batch(batch):
-        out = {}
-        for k in ("tokens", "labels"):
-            v = jnp.asarray(batch[k])
-            if pcfg.cp > 1:
-                v = permute_to_zigzag(v, pcfg.cp, 1)
-            out[k] = jax.device_put(v, NamedSharding(mesh, batch_spec[k]))
-        return out
+    def body(self, p, bb, probes, rew):
+        """shard_map body: traced forward + backward + grad reductions."""
+        cfg, pcfg, bugs = self.cfg, self.pcfg, self.pcfg.bugs
 
-    szs = sizes_coords(pcfg)
+        def local_loss(pp, pr):
+            ctx = TraceContext("rewrite" if rew else "collect",
+                               probes=pr, rewrites=rew or {})
+            gloss, rloss = parallel_gpt_loss(pp, bb, cfg, pcfg.sp, bugs, ctx)
+            return gloss, (ctx.fwd, rloss)
+        (_, (taps, rloss)), (pgt, ag) = jax.value_and_grad(
+            local_loss, argnums=(0, 1), has_aux=True)(p, probes)
+        pg = flatten_named(pgt)
+        pg = reduce_param_grads(pg, pcfg, bugs)
+        ag = reduce_act_grads(ag, self.ann, pcfg, bugs)
+        loss = rloss
+        if self.loss_axes:
+            loss = jax.lax.psum(loss, self.loss_axes) / (pcfg.dp * pcfg.cp)
+        return loss, taps, unflatten_named(pg, pgt), ag
 
-    def _run(batch, rewrites=None) -> Trace:
-        b = prep_batch(batch)
+    def taps_for(self, batch_abstract: dict):
+        """Cached tap discovery for one batch signature: returns
+        ``(tap_key, names, ti, act_pspecs, probes, probe_specs)``.
+        Discovery is a full abstract trace of the forward — cached at module
+        level so repeated runner builds and supervisor replays skip it."""
+        cfg, pcfg = self.cfg, self.pcfg
+        b_sds = {k: jax.ShapeDtypeStruct(tuple(np.shape(v)),
+                                         jnp.result_type(v))
+                 for k, v in batch_abstract.items()}
+        tap_key = (cfg, pcfg, self.psig, _abstract_sig(b_sds))
+        cached = _TAP_CACHE.get(tap_key)
+        if cached is None:
+            bugs = pcfg.bugs
+            ti = {}
 
-        def body(p, bb, probes, rew):
-            def local_loss(pp, pr):
-                ctx = TraceContext("rewrite" if rew else "collect",
-                                   probes=pr, rewrites=rew or {})
-                gloss, rloss = parallel_gpt_loss(pp, bb, cfg, pcfg.sp, bugs,
-                                                 ctx)
-                return gloss, (ctx.fwd, rloss)
-            (_, (taps, rloss)), (pgt, ag) = jax.value_and_grad(
-                local_loss, argnums=(0, 1), has_aux=True)(p, probes)
-            pg = flatten_named(pgt)
-            pg = reduce_param_grads(pg, pcfg, bugs)
-            ag = reduce_act_grads(ag, ann, pcfg, bugs)
-            loss = rloss
-            if loss_axes:
-                loss = jax.lax.psum(loss, loss_axes) / (pcfg.dp * pcfg.cp)
-            return loss, taps, unflatten_named(pg, pgt), ag
-
-        # enumerate taps for THIS batch's shapes
-        ti = {}
-
-        def body_d(p, bb):
-            ctx = TraceContext("collect")
-            parallel_gpt_loss(p, bb, cfg, pcfg.sp, bugs, ctx)[0]
-            ti.clear()
-            ti.update({k: (v.shape, v.dtype) for k, v in ctx.fwd.items()})
-            return jnp.zeros(())
-        jax.eval_shape(shard_map_unchecked(
-            body_d, mesh=mesh, in_specs=(param_specs_tree, batch_spec),
-            out_specs=P()), params, b)
-        names = list(ti)
-        pspecs = {n: spec_to_pspec(ann.act_spec(n), len(ti[n][0]), pcfg)
+            def body_d(p, bb):
+                ctx = TraceContext("collect")
+                parallel_gpt_loss(p, bb, cfg, pcfg.sp, bugs, ctx)[0]
+                ti.clear()
+                ti.update({k: (v.shape, v.dtype)
+                           for k, v in ctx.fwd.items()})
+                return jnp.zeros(())
+            jax.eval_shape(shard_map_unchecked(
+                body_d, mesh=self.mesh,
+                in_specs=(self.param_specs_tree, self.batch_spec),
+                out_specs=P()), self.params_sds, b_sds)
+            cached = _TAP_CACHE[tap_key] = (list(ti), ti)
+        names, ti = cached
+        pspecs = {n: spec_to_pspec(self.ann.act_spec(n), len(ti[n][0]), pcfg)
                   for n in names}
+        szs = sizes_coords(pcfg)
 
         def gshape(n):
             shape = list(ti[n][0])
-            spec = ann.act_spec(n)
+            spec = self.ann.act_spec(n)
             for ax in ("dp", "cp", "tp", "sp"):
                 d = spec.dim_for(ax)
                 if d is not None and szs.get(ax, 1) > 1:
@@ -349,44 +387,91 @@ def make_candidate_runner(cfg: ArchConfig, pcfg: ParallelConfig,
         probes = {n: jnp.zeros(gshape(n), jnp.float32) for n in names
                   if jnp.issubdtype(ti[n][1], jnp.floating)}
         probe_specs = {n: pspecs[n] for n in probes}
+        return tap_key, names, ti, pspecs, probes, probe_specs
+
+    def cached_shard_map(self, tap_key, pspecs, probe_specs, rew_specs,
+                        probes, jit: bool):
+        """The compiled (or raw) shard-mapped step for one signature."""
+        step_key = tap_key + (tuple(probes), tuple(sorted(rew_specs)),
+                              bool(jit))
+        fn = _STEP_CACHE.get(step_key)
+        if fn is None:
+            sm = shard_map_unchecked(
+                self.body, mesh=self.mesh,
+                in_specs=(self.param_specs_tree, self.batch_spec,
+                          probe_specs, rew_specs),
+                out_specs=(P(), pspecs, self.param_specs_tree,
+                           {n: pspecs[n] for n in probes}))
+            fn = _STEP_CACHE[step_key] = jax.jit(sm) if jit else sm
+        return fn
+
+    def unzig(self, n, x):
+        spec = self.ann.act_spec(n)
+        if self.pcfg.cp > 1 and spec.cp_dim is not None:
+            return permute_from_zigzag(x, self.pcfg.cp,
+                                       spec.cp_dim % x.ndim)
+        return x
+
+    def zigzag_batch(self, batch: dict) -> dict:
+        out = {}
+        for k in ("tokens", "labels"):
+            v = jnp.asarray(batch[k])
+            if self.pcfg.cp > 1:
+                v = permute_to_zigzag(v, self.pcfg.cp, 1)
+            out[k] = v
+        return out
+
+
+def make_candidate_runner(cfg: ArchConfig, pcfg: ParallelConfig,
+                          ref_params: dict, opt=None, opt_state=None,
+                          jit: bool = True):
+    """Build ``runner(batch, rewrites) -> Trace`` for the distributed GPT."""
+    pl = _Plumbing(cfg, pcfg, ref_params)
+    bugs = pcfg.bugs
+
+    # shard the (layout-mapped) reference params onto the mesh
+    sharded = {}
+    for name, leaf in flatten_named(ref_params).items():
+        sh = NamedSharding(pl.mesh, pl.param_pspecs[name])
+        sharded[name] = jax.device_put(pl.to_cand(name, leaf), sh)
+    params = unflatten_named(sharded, ref_params)
+
+    def prep_batch(batch):
+        return {k: jax.device_put(v, NamedSharding(pl.mesh,
+                                                   pl.batch_spec[k]))
+                for k, v in pl.zigzag_batch(batch).items()}
+
+    def _run(batch, rewrites=None) -> Trace:
+        b = prep_batch(batch)
+        tap_key, names, ti, pspecs, probes, probe_specs = pl.taps_for(b)
         rew_in = {}
         if rewrites:
             for n, v in rewrites.items():
                 if n not in names:
                     continue
                 v = jnp.asarray(v)
-                spec = ann.act_spec(n)
+                spec = pl.ann.act_spec(n)
                 if pcfg.cp > 1 and spec.cp_dim is not None:
                     v = permute_to_zigzag(v, pcfg.cp, spec.cp_dim % v.ndim)
                 rew_in[n] = jax.device_put(
-                    v, NamedSharding(mesh, pspecs[n]))
+                    v, NamedSharding(pl.mesh, pspecs[n]))
         rew_specs = {n: pspecs[n] for n in rew_in}
 
-        sm = shard_map_unchecked(
-            body, mesh=mesh,
-            in_specs=(param_specs_tree, batch_spec, probe_specs, rew_specs),
-            out_specs=(P(), pspecs, param_specs_tree,
-                       {n: pspecs[n] for n in probes}))
-        fn = jax.jit(sm) if jit else sm
+        fn = pl.cached_shard_map(tap_key, pspecs, probe_specs, rew_specs,
+                                 probes, jit)
         loss, taps, pgt, ag = fn(params, b, probes, rew_in)
-
-        def unzig(n, x):
-            spec = ann.act_spec(n)
-            if pcfg.cp > 1 and spec.cp_dim is not None:
-                return permute_from_zigzag(x, pcfg.cp, spec.cp_dim % x.ndim)
-            return x
 
         tr = Trace()
         tr.loss = float(loss)
         # leaves stay device-resident jax.Arrays — the batched checker reads
         # them in place and only reduction scalars reach the host
-        tr.activations = {n: unzig(n, taps[n]) for n in names}
-        tr.act_grads = {n: unzig(n, ag[n]) for n in names if n in ag}
-        pg_named = {k: from_candidate_layout(k, v)
+        tr.activations = {n: pl.unzig(n, taps[n]) for n in names}
+        tr.act_grads = {n: pl.unzig(n, ag[n]) for n in names if n in ag}
+        pg_named = {k: pl.from_cand(k, v)
                     for k, v in flatten_named(pgt).items()}
         tr.param_grads = dict(pg_named)
         tr.meta["fwd_order"] = names
-        tr.meta["annotations"] = ann
+        tr.meta["annotations"] = pl.ann
         tr.meta["pcfg"] = pcfg
 
         if opt is not None:
@@ -404,6 +489,89 @@ def make_candidate_runner(cfg: ArchConfig, pcfg: ParallelConfig,
         return tr
 
     return _run
+
+
+# ---------------------------------------------------------------------------
+# Stateful candidate train step (the supervisor's lockstep contract)
+# ---------------------------------------------------------------------------
+
+def make_candidate_train_step(cfg: ArchConfig, pcfg: ParallelConfig,
+                              ref_params: dict, opt, batch):
+    """Once-compiled FULL candidate train step with trace collection.
+
+    ``make_candidate_runner`` is stateless — it re-shards the reference
+    params every call and applies the optimizer step eagerly on the host.
+    The streaming supervisor instead threads the candidate's own
+    (params, opt_state) through N steps, so the whole step — layout mapping,
+    shard_map forward/backward, gradient reductions, the (possibly buggy
+    ZeRO) optimizer update and the zigzag un-permutation of the taps — is
+    fused into ONE jitted callable, compiled once against the template
+    ``batch`` shapes.
+
+    Persistent state lives in REFERENCE layout (fused-QKV order, host
+    default placement); the step maps it to the candidate layout and mesh
+    sharding internally.  Returns ``(step, params0, opt_state0)`` with
+    ``step(params, opt_state, batch) -> (Trace, new_params, new_opt_state)``.
+    Trace sections stay device-resident; loss/grad_norm stay device scalars.
+    """
+    pl = _Plumbing(cfg, pcfg, ref_params)
+    bugs = pcfg.bugs
+    tap_key, names, ti, pspecs, probes, probe_specs = pl.taps_for(
+        {k: batch[k] for k in ("tokens", "labels")})
+    # raw (unjitted) shard_map — jitted once below as part of the full step
+    sm = pl.cached_shard_map(tap_key, pspecs, probe_specs, {}, probes,
+                             jit=False)
+
+    def _step(params, opt_state, b, pr):
+        cand = unflatten_named(
+            {n: pl.to_cand(n, l) for n, l in flatten_named(params).items()},
+            params)
+        loss, taps, pgt, ag = sm(cand, b, pr, {})
+        pg_named = {k: pl.from_cand(k, v)
+                    for k, v in flatten_named(pgt).items()}
+        grads_tree = unflatten_named(pg_named, params)
+        if pcfg.zero1:
+            new_p, new_st, info = zero1_update(opt, params, grads_tree,
+                                               opt_state, pcfg.dp, bugs)
+        else:
+            new_p, new_st, info = opt.update(params, grads_tree, opt_state)
+        return (loss, taps, pg_named, ag, flatten_named(info.main_grads),
+                info.grad_norm, new_p, new_st)
+
+    step_c = jax.jit(_step)
+
+    def step(params, opt_state, batch) -> tuple[Trace, dict, dict]:
+        # zigzag (un)permutation stays EAGER on both sides of the jitted
+        # step: global split/concat/reshape of sharded leaves inside jit
+        # miscompiles under GSPMD on this jax line (see zero1_update), and
+        # the eager path is the one the one-shot runner already proves out.
+        # cp == 1 makes both transforms the identity.
+        bb = pl.zigzag_batch(batch)
+        (loss, taps, pg_named, ag, main_grads, grad_norm,
+         new_p, new_st) = step_c(params, opt_state, bb, probes)
+        taps = {n: pl.unzig(n, taps[n]) for n in taps}
+        ag = {n: pl.unzig(n, ag[n]) for n in ag}
+        tr = Trace()
+        tr.loss = loss
+        tr.grad_norm = grad_norm
+        tr.activations = {n: taps[n] for n in names}
+        tr.act_grads = {n: ag[n] for n in names if n in ag}
+        tr.param_grads = dict(pg_named)
+        tr.main_grads = main_grads
+        tr.params_post = flatten_named(new_p)
+        tr.meta["fwd_order"] = list(names)
+        tr.meta["annotations"] = pl.ann
+        tr.meta["pcfg"] = pcfg
+        return tr, new_p, new_st
+
+    # commit the persistent state to the mesh (replicated): the step's
+    # shard_map re-shards internally, jit accepts mesh-committed inputs, and
+    # checkpoint restores (which inherit the template's sharding) come back
+    # mesh-compatible for bisection replay
+    rep = NamedSharding(pl.mesh, P())
+    params0 = jax.device_put(jax.tree.map(jnp.asarray, ref_params), rep)
+    state0 = jax.device_put(opt.init(params0), rep)
+    return step, params0, state0
 
 
 # ---------------------------------------------------------------------------

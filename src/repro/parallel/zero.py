@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.optim.adamw import AdamW
 
@@ -35,12 +36,22 @@ def zero1_update(opt: AdamW, params, grads, state, dp: int,
 
     if "zero_skipped_update" in bugs:
         def stale(newp, oldp):
-            flat_new = newp.reshape(-1)
-            flat_old = oldp.astype(newp.dtype).reshape(-1)
-            n = flat_new.shape[0]
+            n = newp.size
             cut = (n // dp) * (dp - 1)
-            out = jnp.concatenate([flat_new[:cut], flat_old[cut:]])
-            return out.reshape(newp.shape)
+            if newp.ndim == 0:
+                # cut = 0 for a single element: the whole leaf is in the
+                # last (stale) partition, matching the flat-concat semantics
+                return oldp.astype(newp.dtype)
+            # elementwise flat-index mask instead of reshape+concat: global
+            # reshapes of sharded leaves miscompile under GSPMD (jax 0.4.x),
+            # and the supervisor runs this update inside a jitted step over
+            # mesh-sharded params; iota arithmetic is sharding-safe
+            strides = np.cumprod((newp.shape[1:] + (1,))[::-1])[::-1]
+            flat_idx = sum(
+                jax.lax.broadcasted_iota(jnp.int32, newp.shape, d) * int(s)
+                for d, s in enumerate(strides))
+            return jnp.where(flat_idx < cut, newp,
+                             oldp.astype(newp.dtype))
         new_params = jax.tree.map(stale, new_params, params)
         # masters stay consistent with the (buggy) gathered params
         new_state = dict(new_state)

@@ -1,0 +1,23 @@
+"""Streaming training supervisor: online TTrace over multi-step runs.
+
+The paper's workflow (§3) checks ONE training step; the silent bugs it
+targets — stale ZeRO updates, drifting tied embeddings, stale FP8 scales —
+express across *many* optimizer steps.  This subsystem runs reference and
+candidate training loops in lockstep over N steps and checks every step
+online:
+
+* ``runner``   — the lockstep driver (``Supervisor``): one compiled step per
+  side, params/opt_state threaded through, periodic checkpoints;
+* ``pipeline`` — double-buffered async checking: step-k reductions enqueue on
+  device while step k+1 trains, bounded in-flight window with backpressure;
+* ``store``    — spill-to-disk trace ring buffer (sharded-npz manifests);
+  flagged steps are pinned, memory stays flat over long runs;
+* ``bisect``   — checkpoint bisection + sync replay to the FIRST bad step,
+  handing that step to the existing rewrite-mode localizer.
+"""
+from repro.supervise.bisect import BisectResult, bisect_first_bad  # noqa: F401
+from repro.supervise.pipeline import (  # noqa: F401
+    SUPERVISED_KIND_MULT, AsyncCheckPipeline, StepCheck)
+from repro.supervise.runner import (  # noqa: F401
+    SuperviseConfig, SuperviseResult, Supervisor)
+from repro.supervise.store import TraceRing, load_trace, save_trace  # noqa: F401

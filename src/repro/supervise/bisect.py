@@ -1,0 +1,161 @@
+"""First-bad-step bisection over supervisor checkpoints.
+
+Online detection can lag the actual divergence: checks may be subsampled
+(``check_every > 1``), resolve late (async window), or a slow update-path
+drift may cross the threshold only steps after the buggy update started
+(stale ZeRO gathers, drifting tied embeddings).  When a flag lands, the
+supervisor wants the FIRST step at which the candidate left the reference
+beyond FP explanation — that is where the buggy code ran.
+
+Two-phase search, O(log C) cheap probes + one bounded replay:
+
+1. **Checkpoint binary search.**  The supervisor saves both sides' full
+   (params, opt_state) every ``ckpt_every`` steps (bit-exact sharded-npz
+   round trip).  Comparing the two sides' *parameters* at a checkpoint is a
+   cheap divergence probe — no training, one batched reduction — so binary
+   search over checkpoints brackets the divergence to one checkpoint
+   interval and, crucially, finds the latest provably-good restore point.
+2. **Sync replay.**  Restore both sides at that checkpoint and re-run the
+   lockstep loop with synchronous per-step checking until a step flags.
+   Replay is deterministic (stateless data generator + bit-exact restore +
+   the same compiled steps), so the first flagged replay step IS the first
+   bad step of the original run.
+
+The resulting step report is then handed to the existing localization
+machinery (propagation/backward/optimizer modes, and rewrite-mode
+isolation when the divergence is in the forward pass).
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.checkpoint.store import load_checkpoint, save_checkpoint
+from repro.supervise.pipeline import StepCheck
+
+
+class CheckpointKeeper:
+    """Periodic dual-side (reference, candidate) training-state checkpoints.
+
+    ``step`` indexes the state BEFORE that step runs: the step-0 checkpoint
+    is the initial state, the step-k checkpoint is after steps 0..k-1.
+
+    Disk use is bounded like the trace ring: when more than ``keep``
+    checkpoints accumulate, retention thins to log-spaced steps (doubling
+    stride, always keeping step 0 and the newest), which preserves the
+    binary-search probe's O(log) bracketing at coarser granularity instead
+    of growing linearly with run length.
+    """
+
+    def __init__(self, root: str, keep: int = 16):
+        self.root = root
+        self.keep = keep
+        self._stride = 1
+        os.makedirs(root, exist_ok=True)
+        self.steps: list[int] = []
+
+    def _dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:06d}")
+
+    def save(self, step: int, ref_state, cand_state) -> None:
+        """``*_state`` are ``(params, opt_state)`` pytrees."""
+        save_checkpoint(self._dir(step),
+                        {"ref": {"params": ref_state[0], "opt": ref_state[1]},
+                         "cand": {"params": cand_state[0],
+                                  "opt": cand_state[1]}},
+                        step=step)
+        if step not in self.steps:
+            self.steps.append(step)
+            self.steps.sort()
+        self._prune()
+
+    def _prune(self) -> None:
+        import shutil
+        if not self.keep:
+            return
+        while len(self.steps) > self.keep:
+            self._stride *= 2
+            newest = self.steps[-1]
+            removed = False
+            for s in list(self.steps):
+                if s in (0, newest) or s % self._stride == 0:
+                    continue
+                shutil.rmtree(self._dir(s), ignore_errors=True)
+                self.steps.remove(s)
+                removed = True
+            if not removed:
+                break              # only {0, newest} left (keep < 2)
+
+    def load_params_named(self, step: int):
+        """Host-only restore of just the two PARAM trees as flat
+        ``{name: numpy}`` dicts — the cheap divergence probe's payload (no
+        optimizer state, no device placement)."""
+        from repro.checkpoint.store import load_checkpoint_named
+        named, _, _ = load_checkpoint_named(self._dir(step))
+        ref = {k[len("ref.params."):]: v for k, v in named.items()
+               if k.startswith("ref.params.")}
+        cand = {k[len("cand.params."):]: v for k, v in named.items()
+                if k.startswith("cand.params.")}
+        return ref, cand
+
+    def load(self, step: int, ref_template, cand_template):
+        """Returns ``((ref_params, ref_opt), (cand_params, cand_opt))``,
+        placed like the template trees (bit-exact values)."""
+        template = {"ref": {"params": ref_template[0],
+                            "opt": ref_template[1]},
+                    "cand": {"params": cand_template[0],
+                             "opt": cand_template[1]}}
+        tree, _, _ = load_checkpoint(self._dir(step), template)
+        return ((tree["ref"]["params"], tree["ref"]["opt"]),
+                (tree["cand"]["params"], tree["cand"]["opt"]))
+
+
+@dataclass
+class BisectResult:
+    first_bad_step: int
+    check: StepCheck              # the sync replay report at that step
+    replay_from: int              # latest provably-good checkpoint
+    probes: list = field(default_factory=list)   # [(ckpt_step, diverged)]
+    replayed_steps: int = 0
+
+    def summary(self) -> str:
+        probes = ", ".join(f"{s}:{'BAD' if d else 'ok'}"
+                           for s, d in self.probes) or "none"
+        return (f"bisection: first bad step {self.first_bad_step} "
+                f"(replayed {self.replayed_steps} steps from checkpoint "
+                f"{self.replay_from}; checkpoint probes: {probes})")
+
+
+def bisect_first_bad(ckpt_steps, flagged_step: int,
+                     diverged: Callable[[int], bool],
+                     replay: Callable[[int, int], Optional[StepCheck]]
+                     ) -> BisectResult:
+    """Find the first bad step given a flag at ``flagged_step``.
+
+    ``diverged(ckpt_step)`` — cheap parameter-divergence probe at a
+    checkpoint.  ``replay(start, end)`` — restore at ``start`` and re-run
+    with sync checks, returning the first flagged StepCheck (or None if
+    nothing flags up to ``end`` — the caller's online flag then stands).
+    """
+    cands = sorted(s for s in ckpt_steps if 0 < s <= flagged_step)
+    good, probes = 0, []
+    lo, hi = 0, len(cands) - 1
+    while lo <= hi:
+        mid = (lo + hi) // 2
+        d = bool(diverged(cands[mid]))
+        probes.append((cands[mid], d))
+        if d:
+            hi = mid - 1
+        else:
+            good = cands[mid]
+            lo = mid + 1
+    check = replay(good, flagged_step)
+    if check is None:
+        # replay found nothing below threshold-schedule — keep the online
+        # flag as the answer (conservative; should not happen with a
+        # deterministic replay)
+        return BisectResult(flagged_step, StepCheck(flagged_step, None),
+                            good, probes, flagged_step - good + 1)
+    return BisectResult(check.step, check, good, probes,
+                        check.step - good + 1)

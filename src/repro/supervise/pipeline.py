@@ -1,0 +1,149 @@
+"""Double-buffered async checking for the streaming supervisor.
+
+Synchronous per-step checking (``compare_traces`` on the training loop)
+serializes: dispatch the reduction, BLOCK for the ``(N, 2)`` scalars, build
+the report, only then dispatch step k+1 — host and device take turns idling.
+This pipeline splits the check into the two passes the checker already
+exposes:
+
+* at ``submit(k)`` the metadata pass runs (no transfer) and the whole-trace
+  pair reduction is dispatched on device (``relerr_engine.sq_norms_async``) —
+  the returned ``jax.Array`` is held as a future;
+* resolution (host transfer of N x 2 scalars + threshold comparison +
+  localization) happens when the entry leaves the bounded in-flight window,
+  by which time step k+1's compute has been dispatched behind it.
+
+The window is the backpressure bound: at most ``window`` step reductions
+(and the trace leaves they reference) are in flight; submitting beyond it
+resolves the oldest entry first, so device memory for pending checks stays
+O(window), never O(run length).
+
+Thresholds are estimated once at step 0 (paper §5); multi-step checking
+needs two allowances on top:
+
+* per-step kinds (activations / gradients) see batch-to-batch variation of
+  the true FP-noise level that a single-batch estimate misses — measured at
+  up to ~8x on clean runs — so they get a constant widening
+  (``SUPERVISED_KIND_MULT``, bug errors sit ~100-1000x above thresholds);
+* both sides accumulate independent round-off as states evolve, so every
+  threshold additionally grows by ``1 + drift_alpha * step``.
+
+``param_post_step`` keeps multiplier 1.0: the post-step parameter comparison
+is cumulative state, empirically flat on clean runs (~0.1x threshold), and
+it is exactly the signal that catches slow update-path drift — widening it
+would blind the supervisor to the bugs it exists for.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import canonical as C
+from repro.core.checker import (DEFAULT_KINDS, Report, collect_section_pairs,
+                                report_from_errs)
+from repro.core.relerr_engine import _to_rel_err, sq_norms_async
+from repro.core.thresholds import Thresholds
+
+SUPERVISED_KIND_MULT = {
+    C.KIND_ACT: 8.0,
+    C.KIND_ACT_GRAD: 8.0,
+    C.KIND_PARAM_GRAD: 16.0,
+    C.KIND_MAIN_GRAD: 16.0,
+    C.KIND_PARAM_POST: 1.0,
+}
+
+
+@dataclass
+class StepCheck:
+    """One resolved online check: the step index and its report."""
+    step: int
+    report: Report
+
+    @property
+    def flagged(self) -> bool:
+        return not self.report.passed
+
+
+class AsyncCheckPipeline:
+    """Bounded-window async differential checking over a supervised run."""
+
+    def __init__(self, thresholds: Thresholds, window: int = 2,
+                 kinds=DEFAULT_KINDS, kind_mult=None,
+                 drift_alpha: float = 0.125):
+        self.thresholds = thresholds
+        self.window = max(0, int(window))
+        self.kinds = kinds
+        self.kind_mult = dict(SUPERVISED_KIND_MULT if kind_mult is None
+                              else kind_mult)
+        self.drift_alpha = drift_alpha
+        self._inflight: deque = deque()
+        self.submitted = 0
+        self.resolved = 0
+        self.max_in_flight = 0
+
+    # ---- threshold schedule ------------------------------------------------
+    def scales(self, step: int) -> dict:
+        """Per-kind threshold scale at ``step``.  Step 0 compares identical
+        states on the estimation batch — exact single-step semantics."""
+        if step == 0:
+            return {k: 1.0 for k in self.kinds}
+        growth = 1.0 + self.drift_alpha * step
+        return {k: self.kind_mult.get(k, 1.0) * growth for k in self.kinds}
+
+    # ---- pipeline ----------------------------------------------------------
+    @property
+    def in_flight(self) -> int:
+        return len(self._inflight)
+
+    def submit(self, step: int, ref, cand) -> list[StepCheck]:
+        """Enqueue the step-``step`` check; returns any checks that the
+        backpressure bound forced to resolve (oldest first)."""
+        entries, la, lb, missing = collect_section_pairs(ref, cand,
+                                                         self.kinds)
+        dev = sq_norms_async(la, lb)
+        self._inflight.append((step, entries, missing, dev))
+        self.submitted += 1
+        done = []
+        while len(self._inflight) > self.window:
+            done.append(self._resolve())
+        self.max_in_flight = max(self.max_in_flight, len(self._inflight))
+        return done
+
+    def poll(self) -> list[StepCheck]:
+        """Resolve (only) entries whose device reduction already finished —
+        free progress on steps where nothing was submitted."""
+        done = []
+        while self._inflight:
+            dev = self._inflight[0][3]
+            ready = getattr(dev, "is_ready", None)
+            if ready is None or not ready():
+                break
+            done.append(self._resolve())
+        return done
+
+    def drain(self) -> list[StepCheck]:
+        """Resolve everything still in flight (end of run)."""
+        done = []
+        while self._inflight:
+            done.append(self._resolve())
+        return done
+
+    def check_sync(self, step: int, ref, cand) -> StepCheck:
+        """Synchronous one-step check with the supervised threshold schedule
+        (the bisection replay path, and the ``--async-window 0`` mode)."""
+        entries, la, lb, missing = collect_section_pairs(ref, cand,
+                                                         self.kinds)
+        errs = _to_rel_err(np.asarray(sq_norms_async(la, lb), np.float64))
+        rep = report_from_errs(entries, errs, self.thresholds,
+                               missing=missing, thr_scale=self.scales(step))
+        return StepCheck(step, rep)
+
+    def _resolve(self) -> StepCheck:
+        step, entries, missing, dev = self._inflight.popleft()
+        errs = _to_rel_err(np.asarray(dev, np.float64))
+        rep = report_from_errs(entries, errs, self.thresholds,
+                               missing=missing, thr_scale=self.scales(step))
+        self.resolved += 1
+        return StepCheck(step, rep)

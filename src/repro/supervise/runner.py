@@ -1,0 +1,308 @@
+"""Lockstep multi-step supervisor: online TTrace over a whole training run.
+
+``Supervisor`` threads (params, opt_state) through BOTH the single-device
+reference and the distributed candidate for N steps, using exactly one
+compiled step per side (``collector.make_trace_step`` /
+``parallel.api.make_candidate_train_step`` — no re-tracing, no re-jitting
+per step), and checks every step online through the async pipeline:
+
+    step k trains  ->  step-k reductions enqueue on device  ->  step k+1
+    trains while step k's N x 2 scalars are still in flight  ->  the
+    bounded window resolves step k's report
+
+On a flag the run is bisected to the FIRST bad step (checkpoint binary
+search + deterministic sync replay, ``supervise.bisect``) and that step is
+handed to the paper's localization machinery — propagation/backward/
+optimizer modes from the step report, plus rewrite-mode module isolation
+when the divergence is in the forward pass.  This is the paper's §3
+workflow (steps 1-5) run as a loop over the whole training run instead of
+a single snapshot.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core import canonical as C
+from repro.core.checker import Report, localize_with_rewrites
+from repro.core.collector import make_trace_step
+from repro.core.harness import make_model_runner
+from repro.core.relerr_engine import batched_rel_err
+from repro.core.thresholds import MACHINE_EPS, Thresholds, estimate_thresholds
+from repro.data.synthetic import make_batch
+from repro.parallel.api import (ParallelConfig, make_candidate_runner,
+                                make_candidate_train_step)
+from repro.supervise.bisect import (BisectResult, CheckpointKeeper,
+                                    bisect_first_bad)
+from repro.supervise.pipeline import AsyncCheckPipeline, StepCheck
+from repro.supervise.store import TraceRing
+
+
+@dataclass
+class SuperviseConfig:
+    steps: int = 8
+    check_every: int = 1        # online check every C-th step
+    async_window: int = 2       # in-flight device checks; 0 = synchronous
+    ckpt_every: int = 4         # periodic bisection checkpoints
+    ckpt_keep: int = 16         # checkpoint count bound (log-spaced thinning)
+    ring_window: int = 4        # live trace pairs kept in memory
+    spill: bool = True          # spill evicted trace pairs to disk
+    spill_keep: int = 8         # unpinned spilled steps retained on disk
+    drift_alpha: float = 0.125  # per-step threshold growth allowance
+    eps: float = MACHINE_EPS["float32"]
+    margin: float = 8.0
+    localize: bool = True       # rewrite-mode localization at the bad step
+    stop_on_flag: bool = True   # end the run once a resolved check flags
+    work_dir: Optional[str] = None   # checkpoints + spill (tmp if None)
+    seed: int = 0
+
+
+@dataclass
+class SuperviseResult:
+    flagged: bool
+    steps_run: int
+    first_flagged_step: Optional[int]   # first ONLINE-checked step flagging
+    first_bad_step: Optional[int]       # after bisection refinement
+    checks: dict = field(default_factory=dict)   # step -> Report (resolved)
+    bad_check: Optional[StepCheck] = None
+    bisection: Optional[BisectResult] = None
+    localization: Optional[Report] = None        # rewrite-mode report
+    thresholds: Optional[Thresholds] = None
+    losses: list = field(default_factory=list)          # reference loss/step
+    cand_losses: list = field(default_factory=list)
+    timings: dict = field(default_factory=dict)
+    work_dir: Optional[str] = None
+
+    @property
+    def passed(self) -> bool:
+        return not self.flagged
+
+    @property
+    def localized_module(self) -> Optional[str]:
+        if self.localization is not None and self.localization.localized:
+            return self.localization.localized
+        if self.bad_check is not None and self.bad_check.report is not None:
+            return self.bad_check.report.localized
+        if self.first_flagged_step is not None:
+            return self.checks[self.first_flagged_step].localized
+        return None
+
+    def summary(self, max_rows: int = 8) -> str:
+        lines = []
+        status = "PASS" if self.passed else "FAIL"
+        lines.append(f"supervised run: {status} over {self.steps_run} steps "
+                     f"({len(self.checks)} checked online)")
+        if self.flagged:
+            lines.append(f"  first flagged (online): step "
+                         f"{self.first_flagged_step}")
+            if self.bisection is not None:
+                lines.append("  " + self.bisection.summary())
+            lines.append(f"  FIRST BAD STEP: {self.first_bad_step}")
+            if self.bad_check is not None and self.bad_check.report:
+                rep = self.bad_check.report
+                for ln in rep.summary(max_rows=max_rows).splitlines():
+                    lines.append("  " + ln)
+            if self.localization is not None and self.localization.localized:
+                lines.append(f"  LOCALIZED (rewrite): bug in module "
+                             f"'{self.localization.localized}'")
+        return "\n".join(lines)
+
+
+class Supervisor:
+    """Streaming lockstep supervisor for one (model, parallelism) pairing.
+
+    ``batch_fn(step) -> batch`` defaults to the deterministic synthetic
+    generator, which is also what makes bisection replay exact.
+    """
+
+    def __init__(self, model, cfg, pcfg: ParallelConfig, opt,
+                 params=None, scfg: Optional[SuperviseConfig] = None,
+                 batch_fn: Optional[Callable[[int], dict]] = None,
+                 batch_size: int = 4, seq_len: int = 32,
+                 log_fn: Optional[Callable[[str], None]] = None):
+        import jax
+        self.model, self.cfg, self.pcfg, self.opt = model, cfg, pcfg, opt
+        self.scfg = scfg or SuperviseConfig()
+        self.params0 = (params if params is not None
+                        else model.init(jax.random.PRNGKey(self.scfg.seed)))
+        self.batch_fn = batch_fn or (
+            lambda step: make_batch(cfg, batch_size, seq_len,
+                                    seed=self.scfg.seed, step=step))
+        self.log = log_fn or (lambda s: None)
+        self.work_dir = (self.scfg.work_dir
+                         or tempfile.mkdtemp(prefix="ttrace_supervise_"))
+        self.keeper = CheckpointKeeper(os.path.join(self.work_dir, "ckpt"),
+                                       keep=self.scfg.ckpt_keep)
+        # a step's async check resolves at most async_window * check_every
+        # puts after its own, and pinning happens at resolution — the ring
+        # must still hold the step then, or flagged evidence is lost (the
+        # "pinned steps are never dropped" contract)
+        min_window = (self.scfg.async_window
+                      * max(self.scfg.check_every, 1) + 1)
+        self.ring = TraceRing(
+            window=max(self.scfg.ring_window, min_window),
+            spill_dir=(os.path.join(self.work_dir, "spill")
+                       if self.scfg.spill else None),
+            spill_keep=self.scfg.spill_keep)
+        self.pipe: Optional[AsyncCheckPipeline] = None
+        self._ref_step = self._cand_step = None
+        self._ref_state = self._cand_state = None
+        self._bad_entry = None
+
+    # ---- build (thresholds + compiled steps) -------------------------------
+    def _build(self):
+        sc = self.scfg
+        batch0 = self.batch_fn(0)
+        t0 = time.perf_counter()
+        ref_runner = make_model_runner(self.model, self.params0, self.opt,
+                                       self.opt.init(self.params0))
+        thr, _ = estimate_thresholds(ref_runner, batch0, sc.eps, sc.margin,
+                                     sc.seed)
+        t_thr = time.perf_counter() - t0
+        self.pipe = AsyncCheckPipeline(thr, window=sc.async_window,
+                                       drift_alpha=sc.drift_alpha)
+
+        def loss_call(p, b, ctx):
+            return self.model.loss(p, b, ctx=ctx)[0]
+
+        t0 = time.perf_counter()
+        self._ref_step = make_trace_step(loss_call, self.opt, self.params0,
+                                         batch0)
+        self._cand_step, cp0, cs0 = make_candidate_train_step(
+            self.cfg, self.pcfg, self.params0, self.opt, batch0)
+        self._ref_state = (self.params0, self.opt.init(self.params0))
+        self._cand_state = (cp0, cs0)
+        t_build = time.perf_counter() - t0
+        return thr, {"thresholds_s": t_thr, "build_s": t_build}
+
+    # ---- main loop ---------------------------------------------------------
+    def run(self) -> SuperviseResult:
+        sc = self.scfg
+        thr, timings = self._build()
+        res = SuperviseResult(flagged=False, steps_run=0,
+                              first_flagged_step=None, first_bad_step=None,
+                              thresholds=thr, work_dir=self.work_dir)
+        rp, rs = self._ref_state
+        cp, cs = self._cand_state
+        flagged_steps: list[int] = []
+        t_loop = time.perf_counter()
+        t_warm = None          # set once compile-bearing first steps are done
+        k = 0
+        for k in range(sc.steps):
+            if k == 2:
+                for x in res.losses + res.cand_losses:
+                    getattr(x, "block_until_ready", lambda: None)()
+                t_warm = time.perf_counter()
+            if k % sc.ckpt_every == 0:
+                self.keeper.save(k, (rp, rs), (cp, cs))
+            batch = self.batch_fn(k)
+            ref_tr, rp, rs = self._ref_step(rp, rs, batch)
+            cand_tr, cp, cs = self._cand_step(cp, cs, batch)
+            res.losses.append(ref_tr.loss)
+            res.cand_losses.append(cand_tr.loss)
+            if k % sc.check_every == 0:
+                if sc.async_window == 0:
+                    done = [self.pipe.check_sync(k, ref_tr, cand_tr)]
+                else:
+                    done = self.pipe.submit(k, ref_tr, cand_tr)
+            else:
+                done = self.pipe.poll()
+            self.ring.put(k, ref_tr, cand_tr)
+            if self._absorb(done, res, flagged_steps) and sc.stop_on_flag:
+                k += 1
+                break
+        else:
+            k = sc.steps
+        self._absorb(self.pipe.drain(), res, flagged_steps)
+        res.steps_run = k
+        res.losses = [float(x) for x in res.losses]
+        res.cand_losses = [float(x) for x in res.cand_losses]
+        timings["loop_s"] = time.perf_counter() - t_loop
+        timings["steps_per_s"] = res.steps_run / max(timings["loop_s"], 1e-9)
+        if t_warm is not None and res.steps_run > 2:
+            # steady-state rate: first two steps carry jit compilation
+            steady_s = time.perf_counter() - t_warm
+            timings["steady_steps_per_s"] = ((res.steps_run - 2)
+                                             / max(steady_s, 1e-9))
+
+        if flagged_steps:
+            res.flagged = True
+            res.first_flagged_step = min(flagged_steps)
+            t0 = time.perf_counter()
+            self._diagnose(res)
+            timings["diagnose_s"] = time.perf_counter() - t0
+        res.timings = timings
+        return res
+
+    def _absorb(self, done: list[StepCheck], res: SuperviseResult,
+                flagged_steps: list[int]) -> bool:
+        hit = False
+        for chk in done:
+            res.checks[chk.step] = chk.report
+            if chk.flagged:
+                flagged_steps.append(chk.step)
+                if not self.ring.pin(chk.step):
+                    self.log(f"  [supervise] step {chk.step} trace already "
+                             f"evicted before its check resolved — raise "
+                             f"ring_window or enable spill")
+                hit = True
+                self.log(f"  [supervise] step {chk.step} FLAGGED "
+                         f"({len(chk.report.flagged)} tensors, localized: "
+                         f"{chk.report.localized})")
+        return hit
+
+    # ---- diagnosis: bisect + localize --------------------------------------
+    def _params_diverged(self, ckpt_step: int) -> bool:
+        # host-only probe: just the two param trees, no opt state, no
+        # device placement — O(log C) of these run per bisection
+        rp, cp = self.keeper.load_params_named(ckpt_step)
+        errs = batched_rel_err(rp, cp)
+        thr = self.pipe.thresholds
+        growth = 1.0 + self.pipe.drift_alpha * ckpt_step
+        return any(e > thr.threshold(C.KIND_PARAM_POST, n) * growth
+                   for n, e in errs.items())
+
+    def _replay(self, start: int, end: int):
+        """Deterministic sync-checked replay; returns the first flagged
+        StepCheck and stashes the entry states + reference trace of that
+        step for localization."""
+        (rp, rs), (cp, cs) = self.keeper.load(start, self._ref_state,
+                                              self._cand_state)
+        self._bad_entry = None
+        for k in range(start, end + 1):
+            entry = ((rp, rs), (cp, cs))
+            batch = self.batch_fn(k)
+            ref_tr, rp, rs = self._ref_step(rp, rs, batch)
+            cand_tr, cp, cs = self._cand_step(cp, cs, batch)
+            chk = self.pipe.check_sync(k, ref_tr, cand_tr)
+            if chk.flagged:
+                self._bad_entry = (entry, ref_tr)
+                return chk
+        return None
+
+    def _diagnose(self, res: SuperviseResult) -> None:
+        sc = self.scfg
+        res.bisection = bisect_first_bad(self.keeper.steps,
+                                         res.first_flagged_step,
+                                         self._params_diverged, self._replay)
+        res.first_bad_step = res.bisection.first_bad_step
+        res.bad_check = res.bisection.check
+        self.ring.pin(res.first_bad_step)
+        rep = res.bad_check.report if res.bad_check else None
+        if (not sc.localize or rep is None
+                or rep.localization_mode != "propagation"
+                or getattr(self, "_bad_entry", None) is None):
+            return
+        # forward divergence: entry states still agree (this IS the first
+        # bad step), so rewrite-mode module isolation applies as in the
+        # single-step workflow (paper §3 step 5)
+        ((rp, rs), (cp, cs)), ref_tr = self._bad_entry
+        ref_runner = make_model_runner(self.model, rp, self.opt, rs)
+        cand_runner = make_candidate_runner(self.cfg, self.pcfg, cp,
+                                            self.opt, cs)
+        res.localization = localize_with_rewrites(
+            ref_runner, cand_runner, self.batch_fn(res.first_bad_step),
+            ref_tr, self.pipe.thresholds)

@@ -1,0 +1,141 @@
+"""Trace ring buffer with spill-to-disk eviction for supervised runs.
+
+A supervised run produces TWO full traces per step; keeping them all alive
+would grow device memory linearly with run length.  ``TraceRing`` keeps the
+last ``window`` steps live (device-resident, instantly available for
+diagnosis when an async check resolves against them) and evicts older steps:
+
+* with a ``spill_dir``, evicted steps are written to disk in the SAME
+  sharded-npz + JSON-manifest format as ``repro.checkpoint.store`` (one
+  directory per step, one manifest per side), and the on-disk set is itself
+  a ring of ``spill_keep`` steps;
+* without one, evicted steps are dropped.
+
+``pin(step)`` marks a step as evidence (the supervisor pins every flagged
+step): pinned steps are never dropped — they are spilled on eviction even
+when unpinned spill is bounded, and never pruned from disk — so the full
+trace of every suspicious step survives an arbitrarily long run while
+memory and disk stay flat.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.checkpoint.store import (load_checkpoint_named, save_checkpoint)
+from repro.core.collector import _SECTION_FIELDS, Trace
+
+
+def save_trace(path: str, tr: Trace, *, step: int = 0) -> None:
+    """Spill one trace as a sharded-npz manifest checkpoint."""
+    tree = {f: {name: np.asarray(leaf)
+                for name, leaf in getattr(tr, f).raw_items()}
+            for f in _SECTION_FIELDS}
+    extra = {"loss": float(tr.loss), "grad_norm": float(tr.grad_norm),
+             "fwd_order": list(tr.meta.get("fwd_order", []))}
+    save_checkpoint(path, tree, step=step, extra=extra)
+
+
+def load_trace(path: str) -> Trace:
+    """Reload a spilled trace (sections come back as host numpy)."""
+    named, _, extra = load_checkpoint_named(path)
+    tr = Trace()
+    sections: dict[str, dict] = {f: {} for f in _SECTION_FIELDS}
+    for key, arr in named.items():
+        field, _, name = key.partition(".")
+        sections[field][name] = arr
+    for f in _SECTION_FIELDS:
+        setattr(tr, f, sections[f])
+    tr.loss = extra.get("loss", float("nan"))
+    tr.grad_norm = extra.get("grad_norm", float("nan"))
+    if extra.get("fwd_order"):
+        tr.meta["fwd_order"] = list(extra["fwd_order"])
+    return tr
+
+
+class TraceRing:
+    """Bounded ring of per-step (reference, candidate) trace pairs."""
+
+    def __init__(self, window: int = 4, spill_dir: str | None = None,
+                 spill_keep: int = 8):
+        self.window = max(1, int(window))
+        self.spill_dir = spill_dir
+        self.spill_keep = max(0, int(spill_keep))
+        self._mem: OrderedDict[int, tuple[Trace, Trace]] = OrderedDict()
+        self._spilled: OrderedDict[int, str] = OrderedDict()
+        self._pinned: set[int] = set()
+        self.spill_count = 0
+        self.drop_count = 0
+
+    # ---- introspection -----------------------------------------------------
+    @property
+    def in_memory(self) -> list[int]:
+        return list(self._mem)
+
+    @property
+    def on_disk(self) -> list[int]:
+        return list(self._spilled)
+
+    @property
+    def pinned(self) -> set[int]:
+        return set(self._pinned)
+
+    def __contains__(self, step: int) -> bool:
+        return step in self._mem or step in self._spilled
+
+    # ---- ring --------------------------------------------------------------
+    def put(self, step: int, ref: Trace, cand: Trace) -> None:
+        self._mem[step] = (ref, cand)
+        self._evict()
+
+    def pin(self, step: int) -> bool:
+        """Mark a step as evidence (never dropped).  False if the step was
+        already evicted without spill — nothing left to preserve."""
+        if step not in self._mem and step not in self._spilled:
+            return False
+        self._pinned.add(step)
+        return True
+
+    def get(self, step: int) -> tuple[Trace, Trace]:
+        if step in self._mem:
+            return self._mem[step]
+        if step in self._spilled:
+            root = self._spilled[step]
+            return (load_trace(os.path.join(root, "ref")),
+                    load_trace(os.path.join(root, "cand")))
+        raise KeyError(f"step {step} not retained (window={self.window}, "
+                       f"spill={'on' if self.spill_dir else 'off'})")
+
+    def _evict(self) -> None:
+        if self.spill_dir is not None:
+            # memory stays flat: everything past the window spills, pinned
+            # included (the disk copy is the durable one)
+            while len(self._mem) > self.window:
+                step, (ref, cand) = self._mem.popitem(last=False)
+                self._spill(step, ref, cand)
+        else:
+            # no spill backing: pinned evidence stays live and does not
+            # count against the window; oldest unpinned steps drop
+            unpinned = [s for s in self._mem if s not in self._pinned]
+            while len(unpinned) > self.window:
+                del self._mem[unpinned.pop(0)]
+                self.drop_count += 1
+        self._prune_disk()
+
+    def _spill(self, step: int, ref: Trace, cand: Trace) -> None:
+        root = os.path.join(self.spill_dir, f"step_{step:06d}")
+        save_trace(os.path.join(root, "ref"), ref, step=step)
+        save_trace(os.path.join(root, "cand"), cand, step=step)
+        self._spilled[step] = root
+        self.spill_count += 1
+
+    def _prune_disk(self) -> None:
+        if self.spill_dir is None:
+            return
+        unpinned = [s for s in self._spilled if s not in self._pinned]
+        while len(unpinned) > self.spill_keep:
+            s = unpinned.pop(0)
+            shutil.rmtree(self._spilled.pop(s), ignore_errors=True)

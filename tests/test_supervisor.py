@@ -1,0 +1,298 @@
+"""Streaming supervisor: pipeline backpressure, trace-ring spill/pin
+eviction, and end-to-end multi-step bug detection with bisection."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.collector import Trace
+from repro.core.thresholds import Thresholds
+from repro.supervise.pipeline import AsyncCheckPipeline
+from repro.supervise.store import TraceRing, load_trace, save_trace
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _mk_trace(val: float, seed: int = 0) -> Trace:
+    rng = np.random.default_rng(seed)
+    tr = Trace()
+    base = rng.standard_normal((4, 8)).astype(np.float32)
+    tr.activations = {"m1/input": base + val, "m1/output": 2 * base + val}
+    tr.act_grads = {"m1/input": base - val}
+    tr.param_grads = {"m1.w": base * 3 + val}
+    tr.main_grads = {"m1.w": base * 3 + val}
+    tr.params_post = {"m1.w": base * 5 + val}
+    tr.loss = float(val)
+    tr.grad_norm = 1.0
+    tr.meta["fwd_order"] = ["m1/input", "m1/output"]
+    return tr
+
+
+# ---------------------------------------------------------------------------
+# pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_backpressure_bounds_in_flight():
+    thr = Thresholds(eps=2.0 ** -24)
+    pipe = AsyncCheckPipeline(thr, window=2)
+    resolved = []
+    for k in range(7):
+        ref = _mk_trace(0.0, seed=k)
+        cand = _mk_trace(0.0 if k != 4 else 1.0, seed=k)   # bug at step 4
+        resolved += pipe.submit(k, ref, cand)
+        assert pipe.in_flight <= 2          # the backpressure bound
+    assert pipe.in_flight == 2
+    resolved += pipe.drain()
+    assert pipe.in_flight == 0
+    assert [c.step for c in resolved] == list(range(7))    # resolve in order
+    assert pipe.max_in_flight <= 2
+    flagged = [c.step for c in resolved if c.flagged]
+    assert flagged == [4]
+
+
+def test_pipeline_sync_mode_matches_async():
+    thr = Thresholds(eps=2.0 ** -24)
+    pipe = AsyncCheckPipeline(thr, window=3)
+    ref, cand = _mk_trace(0.0), _mk_trace(0.5)
+    async_rep = (pipe.submit(1, ref, cand) + pipe.drain())[0].report
+    sync_rep = pipe.check_sync(1, ref, cand).report
+    assert ([r.flagged for r in async_rep.records]
+            == [r.flagged for r in sync_rep.records])
+    assert async_rep.localized == sync_rep.localized
+
+
+def test_pipeline_step0_uses_exact_single_step_thresholds():
+    thr = Thresholds(eps=2.0 ** -24)
+    pipe = AsyncCheckPipeline(thr, window=1, drift_alpha=0.25)
+    assert pipe.scales(0) == {k: 1.0 for k in pipe.kinds}
+    s5 = pipe.scales(5)
+    from repro.core import canonical as C
+    assert s5[C.KIND_ACT] == pipe.kind_mult[C.KIND_ACT] * (1 + 0.25 * 5)
+    # the cumulative param comparison stays sharp (drift detector)
+    assert s5[C.KIND_PARAM_POST] == 1.0 * (1 + 0.25 * 5)
+
+
+# ---------------------------------------------------------------------------
+# trace ring
+# ---------------------------------------------------------------------------
+
+def test_ring_eviction_spills_and_prunes(tmp_path):
+    ring = TraceRing(window=2, spill_dir=str(tmp_path), spill_keep=3)
+    for k in range(8):
+        ring.put(k, _mk_trace(float(k)), _mk_trace(float(k) + 0.5))
+    assert ring.in_memory == [6, 7]                  # window
+    assert len(ring.on_disk) == 3                    # pruned to spill_keep
+    assert ring.on_disk == [3, 4, 5]
+    ref, cand = ring.get(4)                          # disk round-trip
+    np.testing.assert_allclose(ref.activations["m1/input"],
+                               _mk_trace(4.0).activations["m1/input"])
+    assert ref.meta["fwd_order"] == ["m1/input", "m1/output"]
+    with pytest.raises(KeyError):
+        ring.get(0)                                  # pruned
+
+
+def test_ring_pinned_steps_survive(tmp_path):
+    ring = TraceRing(window=2, spill_dir=str(tmp_path), spill_keep=1)
+    for k in range(4):
+        ring.put(k, _mk_trace(float(k)), _mk_trace(float(k)))
+    assert ring.pin(1)                               # on disk already
+    for k in range(4, 9):
+        ring.put(k, _mk_trace(float(k)), _mk_trace(float(k)))
+    assert 1 in ring.on_disk                         # pinned survives pruning
+    unpinned_disk = [s for s in ring.on_disk if s != 1]
+    assert len(unpinned_disk) == 1                   # ring stayed bounded
+    ref, _ = ring.get(1)
+    assert ref.loss == 1.0
+
+
+def test_ring_without_spill_drops_unpinned_keeps_pinned():
+    ring = TraceRing(window=2, spill_dir=None)
+    for k in range(3):
+        ring.put(k, _mk_trace(float(k)), _mk_trace(float(k)))
+    ring.pin(1)
+    for k in range(3, 6):
+        ring.put(k, _mk_trace(float(k)), _mk_trace(float(k)))
+    assert 1 in ring.in_memory                       # pinned stays live
+    assert ring.pin(0) is False                      # dropped: nothing left
+    with pytest.raises(KeyError):
+        ring.get(2)
+    assert set(ring.in_memory) == {1, 4, 5}
+
+
+def test_checkpoint_keeper_thins_log_spaced(tmp_path):
+    import os
+
+    import jax.numpy as jnp
+
+    from repro.supervise.bisect import CheckpointKeeper
+    keeper = CheckpointKeeper(str(tmp_path), keep=4)
+    state = ({"w": jnp.ones((2,))}, {"m": jnp.zeros((2,))})
+    for s in range(0, 36, 4):
+        keeper.save(s, state, state)
+    assert len(keeper.steps) <= 5                    # bounded, not linear
+    assert 0 in keeper.steps and 32 in keeper.steps  # endpoints survive
+    for s in keeper.steps:                           # dirs match the index
+        assert os.path.isdir(keeper._dir(s))
+    on_disk = [d for d in os.listdir(str(tmp_path)) if d.startswith("step_")]
+    assert len(on_disk) == len(keeper.steps)         # pruned dirs removed
+
+
+def test_save_load_trace_roundtrip(tmp_path):
+    tr = _mk_trace(0.25)
+    save_trace(str(tmp_path / "t"), tr, step=3)
+    back = load_trace(str(tmp_path / "t"))
+    for f in ("activations", "act_grads", "param_grads", "main_grads",
+              "params_post"):
+        a, b = getattr(tr, f), getattr(back, f)
+        assert list(a) == list(b)
+        for name in a:
+            np.testing.assert_array_equal(a[name], b[name])
+    assert back.loss == tr.loss
+
+
+# ---------------------------------------------------------------------------
+# end-to-end (single device, in-process): clean pass + a W-CP bug
+# ---------------------------------------------------------------------------
+
+def _small_setup():
+    import dataclasses
+
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.models.model import Model
+    from repro.optim.adamw import AdamW
+    cfg = dataclasses.replace(get_config("gpt-paper").reduced(),
+                              n_layers=2, vocab=256, tie_embeddings=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params, AdamW(lr=1e-3)
+
+
+def test_supervisor_clean_run_passes(tmp_path):
+    from repro.parallel.api import ParallelConfig
+    from repro.supervise import Supervisor, SuperviseConfig
+    cfg, model, params, opt = _small_setup()
+    sup = Supervisor(model, cfg, ParallelConfig(), opt, params=params,
+                     scfg=SuperviseConfig(steps=5, ring_window=2,
+                                          work_dir=str(tmp_path)),
+                     batch_size=2, seq_len=16)
+    res = sup.run()
+    assert res.passed, res.summary()
+    assert len(res.checks) == 5
+    assert res.steps_run == 5
+    # ring_window=2 is raised to async_window * check_every + 1 = 3 so a
+    # step's trace is still live when its async check resolves
+    assert sup.ring.window == 3
+    assert sup.ring.in_memory == [2, 3, 4]
+    assert sup.ring.on_disk == [0, 1]                # spilled, memory flat
+    assert sup.pipe.max_in_flight <= 2
+
+
+def test_supervisor_detects_recompute_bug_and_bisects(tmp_path):
+    import fnmatch
+
+    from repro.bugs.registry import BUGS
+    from repro.parallel.api import ParallelConfig
+    from repro.supervise import Supervisor, SuperviseConfig
+    cfg, model, params, opt = _small_setup()
+    spec = BUGS["ar_stale_recompute"]                # W-CP, no parallelism req
+    pcfg = ParallelConfig(bugs=frozenset(["ar_stale_recompute"]))
+    sup = Supervisor(model, cfg, pcfg, opt, params=params,
+                     scfg=SuperviseConfig(steps=4, work_dir=str(tmp_path)),
+                     batch_size=2, seq_len=16)
+    res = sup.run()
+    assert res.flagged
+    assert res.first_bad_step == 0                   # buggy from step 0
+    assert res.first_flagged_step in sup.ring.pinned
+    loc = res.localized_module or "-"
+    assert fnmatch.fnmatchcase(loc, spec.expected_module), (
+        loc, spec.expected_module)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end (8 forced host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+def _run(code: str, devices: int = 8, timeout: int = 1200) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env, cwd=ROOT)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    return out.stdout
+
+
+PREAMBLE = """
+import dataclasses, fnmatch, jax
+from repro.bugs.registry import BUGS
+from repro.configs.base import get_config
+from repro.models.model import Model
+from repro.optim.adamw import AdamW
+from repro.parallel.api import ParallelConfig
+from repro.supervise import Supervisor, SuperviseConfig
+
+cfg = dataclasses.replace(get_config("gpt-paper").reduced(),
+                          n_layers=2, vocab=512, tie_embeddings=True)
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+"""
+
+
+@pytest.mark.slow
+def test_supervisor_flags_distributed_bugs_with_expected_module():
+    out = _run(PREAMBLE + """
+for bug in ["tp_wrong_embedding_mask", "dp_wrong_loss_scale",
+            "zero_skipped_update"]:
+    spec = BUGS[bug]
+    req = set(spec.requires)
+    pcfg = ParallelConfig(dp=2, tp=2, sp="sp" in req, zero1="zero1" in req,
+                          bugs=frozenset([bug]))
+    sup = Supervisor(model, cfg, pcfg, AdamW(lr=1e-3), params=params,
+                     scfg=SuperviseConfig(steps=3))
+    res = sup.run()
+    assert res.flagged, bug
+    assert res.first_bad_step == 0, (bug, res.first_bad_step)
+    loc = res.localized_module or "-"
+    ok = (fnmatch.fnmatchcase(loc, spec.expected_module)
+          or spec.expected_module == "loss")
+    assert ok, (bug, loc, spec.expected_module)
+    print("OK", bug, "->", loc)
+print("ALL_BUGS_FLAGGED")
+""", devices=4)
+    assert "ALL_BUGS_FLAGGED" in out
+
+
+@pytest.mark.slow
+def test_supervisor_catches_late_visible_update_bug():
+    """zero_skipped_update at a fine-tuning learning rate: the single-step
+    check passes, the multi-step supervisor flags the accumulated drift."""
+    out = _run(PREAMBLE + """
+from repro.core.harness import make_model_runner, ttrace_check
+from repro.data.synthetic import make_batch
+from repro.parallel.api import make_candidate_runner
+
+LR = 1e-7
+pcfg = ParallelConfig(dp=2, tp=2, zero1=True,
+                      bugs=frozenset(["zero_skipped_update"]))
+opt = AdamW(lr=LR)
+one = ttrace_check(
+    make_model_runner(model, params, opt, opt.init(params)),
+    make_candidate_runner(cfg, pcfg, params, opt, opt.init(params)),
+    make_batch(cfg, 4, 32), localize=False)
+assert one.passed, "single-step check should miss this at lr=1e-7"
+
+sup = Supervisor(model, cfg, pcfg, AdamW(lr=LR), params=params,
+                 scfg=SuperviseConfig(steps=16, check_every=2, ckpt_every=4))
+res = sup.run()
+assert res.flagged, "supervisor should catch the accumulated drift"
+assert res.first_flagged_step >= 1, res.first_flagged_step
+assert res.first_bad_step >= 1, res.first_bad_step
+print("LATE_CATCH", res.first_flagged_step, res.first_bad_step)
+""", devices=4)
+    assert "LATE_CATCH" in out
