@@ -12,7 +12,13 @@ Writes ``BENCH_supervisor.json`` mapping row name -> microseconds per step:
 * ``supervisor/sync``         — supervised, ``async_window=0`` (block on
   every check);
 * ``supervisor/async2``       — supervised, 2-deep async check window;
-* ``supervisor/async2_spill`` — same plus the spill-to-disk trace ring.
+* ``supervisor/async2_spill`` — same plus the spill-to-disk trace ring;
+* ``supervisor/pp2_async2``   — the pipeline-parallel candidate (2 stages)
+  under the same async supervision;
+* ``supervisor/fp8_tile128_async2`` — the FP8 tile128 candidate under BF16
+  thresholds;
+* ``supervisor/reest_async2`` — dense async loop with periodic threshold
+  re-estimation on the live batch.
 """
 from __future__ import annotations
 
@@ -38,6 +44,16 @@ def run(json_path: str = "BENCH_supervisor.json"):
          f"{sync_s / async_s:.2f}x faster than sync")
     emit("supervisor/async2_spill", spill_s * 1e6,
          f"spill ring cost {(spill_s - async_s) * 1e3:+.1f} ms/step")
+    pp_s = float(kv["pp_s_per_step"])
+    fp8_s = float(kv["fp8_s_per_step"])
+    reest_s = float(kv["reest_s_per_step"])
+    emit("supervisor/pp2_async2", pp_s * 1e6,
+         "2-stage pipeline candidate under async supervision")
+    emit("supervisor/fp8_tile128_async2", fp8_s * 1e6,
+         "fp8 tile128 candidate, BF16-eps thresholds")
+    emit("supervisor/reest_async2", reest_s * 1e6,
+         f"periodic re-estimation cost {(reest_s - async_s) * 1e3:+.1f} "
+         f"ms/step")
     write_json(json_path, rows=ROWS[first_row:])
     ok = async_s <= 2.0 * nocheck and async_s < sync_s
     emit("supervisor/acceptance", 0.0,

@@ -63,11 +63,14 @@ def main():
     print(f"plain_s_per_step\t{plain:.6f}")
 
     # --- supervised runs ----------------------------------------------------
-    def supervised(window: int, spill: bool, check_every: int = 1):
+    def supervised(window: int, spill: bool, check_every: int = 1,
+                   run_pcfg: ParallelConfig = pcfg,
+                   reestimate_every: int = 0):
         sup = Supervisor(
-            model, cfg, pcfg, AdamW(lr=1e-3), params=params,
+            model, cfg, run_pcfg, AdamW(lr=1e-3), params=params,
             scfg=SuperviseConfig(steps=WARM + STEPS, async_window=window,
                                  check_every=check_every,
+                                 reestimate_every=reestimate_every,
                                  spill=spill, ring_window=4,
                                  ckpt_every=WARM + STEPS,
                                  stop_on_flag=False),
@@ -89,6 +92,18 @@ def main():
     print(f"async_spill_s_per_step\t{spill_s:.6f}")
     print(f"async_overhead_x\t{async_s / nocheck:.3f}")
     print(f"sync_overhead_x\t{sync_s / nocheck:.3f}")
+
+    # --- recipe-generic supervision: pp / fp8 candidates --------------------
+    pp_s = supervised(window=2, spill=False,
+                      run_pcfg=ParallelConfig(pp=2))
+    print(f"pp_s_per_step\t{pp_s:.6f}")
+    fp8_s = supervised(window=2, spill=False,
+                       run_pcfg=ParallelConfig(fp8="tile128"))
+    print(f"fp8_s_per_step\t{fp8_s:.6f}")
+    # periodic re-estimation overhead on the async dense loop (R = 1/3 run)
+    reest_s = supervised(window=2, spill=False,
+                         reestimate_every=(WARM + STEPS) // 3)
+    print(f"reest_s_per_step\t{reest_s:.6f}")
 
 
 if __name__ == "__main__":

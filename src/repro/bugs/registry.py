@@ -61,9 +61,9 @@ BUGS: dict[str, BugSpec] = {b.bug_id: b for b in [
             "for the last rank's partition; those params never train",
             "no parameter update (partial)", "optimizer", ("zero1",)),
     BugSpec("pp_wrong_stage_division", "W-CP", "bug 10 (PP wrong stage division)",
-            "pipeline stage boundaries computed with floor instead of exact "
-            "division; one layer is executed twice, another skipped",
-            "wrong model gets trained", "layers", ("pp",)),
+            "pipeline stage boundaries computed with a rounded layers-per-"
+            "stage; one layer is executed twice, another skipped",
+            "wrong model gets trained", "layers.*", ("pp",)),
     BugSpec("sp_stale_wgrad", "W-CP", "bug 11 (wrong grads w/ overlap)",
             "row-parallel linear_proj weight gradient computed from a stale "
             "(half-zeroed) activation buffer, as if the overlapped backward "

@@ -115,10 +115,15 @@ def ttrace_supervise(model, cfg, pcfg, opt, params=None, steps: int = 8,
     training loops in lockstep for ``steps`` steps with online (async)
     checking, and on a flag bisect to the first bad step and localize.
 
+    Recipe-generic: ``pcfg`` selects the shard_map (dense/MoE/ZeRO-1),
+    pipeline-parallel (``pp=N``) or FP8 (``fp8="tile128"`` etc., checked
+    under BF16 epsilon automatically) candidate.
+
     Thin facade over ``repro.supervise.Supervisor`` — ``kwargs`` map onto
     ``SuperviseConfig`` fields (``check_every``, ``async_window``,
-    ``ckpt_every``, ...) plus ``batch_size``/``seq_len``/``log_fn`` for the
-    default synthetic batch stream.  Returns a ``SuperviseResult`` whose
+    ``ckpt_every``, ``reestimate_every``, ...) plus
+    ``batch_size``/``seq_len``/``log_fn`` for the default synthetic batch
+    stream.  Returns a ``SuperviseResult`` whose
     ``summary()``/``passed``/``localized_module`` mirror ``TTraceResult``.
     """
     from repro.supervise import Supervisor, SuperviseConfig

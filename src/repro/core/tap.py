@@ -72,8 +72,12 @@ class TraceContext:
             # straight-through overwrite: the VALUE becomes the rewrite, but
             # gradients still flow through the original tensor — so threshold
             # estimation (eps-perturbed rewrites) keeps the true gradient
-            # topology, and localization mode stays differentiable.
-            r = self.rewrites[name].astype(x.dtype)
+            # topology, and localization mode stays differentiable.  A
+            # callable rewrite maps the tapped value to its replacement
+            # inside the trace (the fused pair estimator perturbs the
+            # embedding output per vmapped row this way).
+            rw = self.rewrites[name]
+            r = (rw(x) if callable(rw) else rw).astype(x.dtype)
             x = x + jax.lax.stop_gradient(r - x)
         if name in self.fwd:
             raise ValueError(

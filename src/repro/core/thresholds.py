@@ -67,6 +67,21 @@ class Thresholds:
         margin = self.kind_margins.get(kind, self.margin)
         return margin * max(est, self.floor_mult * self.eps)
 
+    def union(self, other: "Thresholds") -> "Thresholds":
+        """Elementwise-max merge of two estimates (same eps/margin).
+
+        Periodic re-estimation unions each fresh live-batch estimate into
+        the running thresholds: per-tensor floors only ever widen, so a
+        batch with unusually low FP noise can never shrink a threshold
+        below what an earlier batch already proved reachable."""
+        per = {k: dict(v) for k, v in self.per_tensor.items()}
+        for kind, named in other.per_tensor.items():
+            d = per.setdefault(kind, {})
+            for n, e in named.items():
+                d[n] = max(d.get(n, 0.0), e)
+        return Thresholds(eps=self.eps, margin=self.margin,
+                          floor_mult=self.floor_mult, per_tensor=per)
+
 
 def _diff_sections(t1: Trace, t2: Trace) -> dict[str, dict[str, float]]:
     out = {}
@@ -135,3 +150,109 @@ def estimate_thresholds(run_trace, batch: dict, eps: float,
         t2 = run_trace(b2, rew)
     thr = Thresholds(eps=eps, margin=margin, per_tensor=_diff_sections(t1, t2))
     return thr, t1
+
+
+# ---------------------------------------------------------------------------
+# Once-compiled fused pair estimator (periodic re-estimation, paper §5 live)
+# ---------------------------------------------------------------------------
+
+_EMB_TAP = "embedding/output"
+
+
+def make_pair_estimator(loss_call, opt, params, batch, eps: float,
+                        margin: float = 8.0, seed: int = 0):
+    """Build ``estimate(params, opt_state, batch) -> Thresholds`` compiled
+    exactly once — the supervised loop's periodic threshold RE-estimation.
+
+    One vmapped jitted call collects the base and eps-perturbed traces of
+    the CURRENT reference state on the live batch (the fused pair path of
+    ``estimate_thresholds``, but stateful and cached).  Float model inputs
+    are perturbed per-row in the stacked batch; token-only models fold the
+    embedding-output perturbation INTO the stacked run via a per-row
+    callable rewrite ``x + flag * eps * ||x|| * d/||d||`` (flag 0 on the
+    base row) — the fused path the serial estimator cannot take because the
+    one-shot rewrite needs the base trace first.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.collector import (_make_probes, flatten_named,
+                                      tap_shapes)
+    from repro.core.tap import TraceContext
+
+    batch_t = {k: jnp.asarray(v) for k, v in batch.items()}
+    float_keys = _float_keys(batch_t)
+    shapes, fwd_order = tap_shapes(loss_call, params, batch_t, None)
+    token_mode = not float_keys
+    if token_mode and _EMB_TAP not in shapes:
+        raise ValueError("no float inputs and no embedding/output tap — "
+                         "cannot build a fused pair estimator")
+    probes = _make_probes(shapes, None, True)
+    base_key = jax.random.PRNGKey(seed ^ 0x5EED)
+
+    def one(p, b, flag, step_k, pr):
+        def loss_fn(pp, prr):
+            rew = {}
+            if token_mode:
+                def perturb_tap(x):
+                    # directional eps-noise gated by the row flag; matches
+                    # generator.perturb semantics (||dX|| = eps * ||X||).
+                    # The direction varies per re-estimation (step folded
+                    # into the key, like the float path's per-step seed) so
+                    # the union explores new directions each epoch.
+                    d = jax.random.normal(jax.random.fold_in(base_key,
+                                                             step_k),
+                                          x.shape, jnp.float32)
+                    nx = jnp.sqrt(jnp.sum(jnp.square(
+                        x.astype(jnp.float32))))
+                    nd = jnp.maximum(jnp.sqrt(jnp.sum(jnp.square(d))),
+                                     1e-30)
+                    return (x.astype(jnp.float32)
+                            + flag * (eps * nx / nd) * d)
+                rew = {_EMB_TAP: perturb_tap}
+            ctx = TraceContext("rewrite" if rew else "collect", probes=prr,
+                              rewrites=rew)
+            loss = loss_call(pp, b, ctx)
+            return loss, ctx.fwd
+        (loss, fwd), (pg, ag) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(p, pr)
+        return loss, fwd, pg, ag
+
+    def _pair(p, st, b2, flags, step_k, pr):
+        loss, fwd, pg, ag = jax.vmap(
+            one, in_axes=(None, 0, 0, None, None))(p, b2, flags, step_k, pr)
+        new_p, _, info = jax.vmap(
+            opt.update, in_axes=(None, 0, None))(p, pg, st)
+        return loss, fwd, pg, ag, info.main_grads, new_p
+
+    pair_c = jax.jit(_pair)
+    flags = jnp.asarray([0.0, 1.0], jnp.float32)
+
+    def estimate(p, st, live_batch, step: int = 0) -> Thresholds:
+        if token_mode:
+            b2 = {k: jnp.stack([jnp.asarray(v)] * 2)
+                  for k, v in live_batch.items()}
+        else:
+            b2 = {}
+            for i, k in enumerate(live_batch):
+                base = np.asarray(live_batch[k])
+                pert = (perturb(base, eps, seed=seed + step * 131 + i)
+                        if k in float_keys else base)
+                b2[k] = jnp.stack([jnp.asarray(base), jnp.asarray(pert)])
+        loss, fwd, pg, ag, mg, new_p = pair_c(p, st, b2, flags,
+                                              jnp.int32(step), probes)
+        pg_named, mg_named = flatten_named(pg), flatten_named(mg)
+        np_named = flatten_named(new_p)
+        traces = []
+        for i in (0, 1):
+            tr = Trace()
+            tr.activations = {k: fwd[k][i] for k in fwd_order}
+            tr.act_grads = {k: ag[k][i] for k in fwd_order if k in ag}
+            tr.param_grads = {k: v[i] for k, v in pg_named.items()}
+            tr.main_grads = {k: v[i] for k, v in mg_named.items()}
+            tr.params_post = {k: v[i] for k, v in np_named.items()}
+            traces.append(tr)
+        return Thresholds(eps=eps, margin=margin,
+                          per_tensor=_diff_sections(traces[0], traces[1]))
+
+    return estimate

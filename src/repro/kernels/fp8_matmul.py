@@ -1,11 +1,20 @@
-"""Pallas TPU tiled FP8 (e4m3) matmul with fp32 accumulation.
+"""Pallas TPU tiled FP8 (e4m3) matmuls with fp32 accumulation.
 
-Grid (M/bm, N/bn, K/bk); the K axis is sequential with an (bm, bn) fp32 VMEM
-accumulator.  Operands arrive pre-quantized (float8_e4m3fn) with scales
-applied outside (repro.precision.fp8 owns the recipes); on MXU-native-fp8
-TPUs the dot stays in fp8, elsewhere operands upcast in-register.  Block
-shapes default to (256, 256, 256) — multiples of the (8,128)/(128,128)
-MXU tiles.
+Two variants share the same grid shape (M/bm, N/bn, K/bk) with a sequential
+K axis and an (bm, bn) fp32 VMEM accumulator:
+
+* ``fp8_matmul`` — operands arrive pre-quantized (float8_e4m3fn) with ONE
+  scale per operand applied outside (repro.precision.fp8 owns the recipes);
+* ``fp8_matmul_tile128`` — the DeepSeek-style per-128x128-tile recipe:
+  compact per-tile scale arrays ride along and the block's
+  ``sx[mi,ki] * sw[ki,ni]`` product is applied inside the K loop (per-tile
+  scales vary along the contraction, so they CANNOT be folded outside).
+  Blocks are fixed at the 128 tile size so each grid step covers exactly
+  one scale entry per operand.
+
+On MXU-native-fp8 TPUs the dot stays in fp8, elsewhere operands upcast
+in-register.  Plain-variant block shapes default to (256, 256, 256) —
+multiples of the (8,128)/(128,128) MXU tiles.
 """
 from __future__ import annotations
 
@@ -56,3 +65,58 @@ def fp8_matmul(x, w, bm: int = 256, bn: int = 256, bk: int = 256,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, w)
+
+
+TILE = 128
+
+
+def _mm_tile_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *, nk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    # one 128-block == one quantization tile: the per-tile dequant scale of
+    # this K step is the scalar product sx[mi, ki] * sw[ki, ni]
+    s = sx_ref[0, 0] * sw_ref[0, 0]
+    acc_ref[...] += s * jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fp8_matmul_tile128(x, sx, w, sw, interpret: bool = True):
+    """Per-128x128-tile-scaled fp8 matmul (the DeepSeek-V3 recipe).
+
+    x: (M,K) float8_e4m3fn with compact tile scales sx: (M/128, K/128) f32;
+    w: (K,N) float8_e4m3fn with sw: (K/128, N/128) f32 -> (M,N) float32,
+    mathematically ``(x_deq @ w_deq)`` with per-element dequantization but
+    without ever materializing the dequantized operands in HBM.
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    assert M % TILE == 0 and N % TILE == 0 and K % TILE == 0, (M, N, K)
+    assert sx.shape == (M // TILE, K // TILE), (sx.shape, x.shape)
+    assert sw.shape == (K // TILE, N // TILE), (sw.shape, w.shape)
+    kernel = functools.partial(_mm_tile_kernel, nk=K // TILE)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // TILE, N // TILE, K // TILE),
+        in_specs=[
+            pl.BlockSpec((TILE, TILE), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((TILE, TILE), lambda mi, ni, ki: (ki, ni)),
+            pl.BlockSpec((1, 1), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((1, 1), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((TILE, TILE), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((TILE, TILE), jnp.float32)],
+        interpret=interpret,
+    )(x, w, sx, sw)

@@ -48,6 +48,11 @@ def fp8_matmul(x, w, bm=256, bn=256, bk=256):
                           interpret=interpret_mode())
 
 
+def fp8_matmul_tile128(x, sx, w, sw):
+    """Per-128x128-tile-scaled fp8 matmul (compact tile scales ride along)."""
+    return _mm.fp8_matmul_tile128(x, sx, w, sw, interpret=interpret_mode())
+
+
 def rel_err(a, b) -> float:
     return _re.rel_err_fused(a, b, interpret=interpret_mode())
 

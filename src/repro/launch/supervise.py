@@ -3,10 +3,20 @@
     PYTHONPATH=src python -m repro.launch.supervise --arch tinyllama-1.1b \
         --reduced --steps 8 --bug zero_skipped_update
 
-Runs the single-device reference and the distributed candidate (with any
-injected registry bugs) in lockstep, checking every step online through the
-async pipeline; on a flag the run is bisected to the first bad step and the
-bug is localized.  The paper's §3 workflow (steps 1-5), looped per step.
+    # recipe-generic: pipeline-parallel / FP8 candidates, same workflow
+    PYTHONPATH=src python -m repro.launch.supervise --recipe pp \
+        --reduced --steps 8 --bug pp_wrong_stage_division
+    PYTHONPATH=src python -m repro.launch.supervise --recipe fp8-tile128 \
+        --reduced --steps 8 --bug fp8_stale_scale
+
+Runs the single-device reference and the candidate recipe (shard_map
+dense/MoE/ZeRO-1, staged pipeline, or FP8 — with any injected registry
+bugs) in lockstep, checking every step online through the async pipeline;
+on a flag the run is bisected to the first bad step and the bug is
+localized.  The paper's §3 workflow (steps 1-5), looped per step.  FP8
+recipes are checked under BF16-epsilon thresholds automatically (§6.7);
+``--reestimate-every R`` re-runs the fused threshold estimate on the live
+batch every R steps and tightens the supervised margins.
 """
 from __future__ import annotations
 
@@ -20,20 +30,82 @@ import dataclasses
 import fnmatch
 import sys
 
+RECIPES = ("dense", "moe", "zero1", "pp",
+           "fp8-global", "fp8-per_tensor", "fp8-tile128")
 
-def build_pcfg(args, requires: set):
+
+def build_pcfg(args, requires: set, arch_is_moe: bool = False):
     from repro.parallel.api import ParallelConfig
-    return ParallelConfig(
-        dp=args.dp, cp=args.cp if args.cp > 1 else (2 if "cp" in requires
-                                                    else 1),
-        tp=args.tp, sp=args.sp or "sp" in requires,
-        zero1=args.zero1 or "zero1" in requires,
-        bugs=frozenset([args.bug]) if args.bug else frozenset())
+    bugs = frozenset([args.bug]) if args.bug else frozenset()
+    recipe = args.recipe or "dense"
+    # a bug whose requirements name a recipe pulls that recipe in (so
+    # --bug pp_wrong_stage_division alone drives the pp candidate) — but an
+    # EXPLICIT conflicting --recipe is refused, never silently replaced
+    for feat, forced in (("pp", "pp"), ("fp8", "fp8-global")):
+        if feat in requires and not recipe.startswith(feat):
+            if args.recipe is not None:
+                raise SystemExit(
+                    f"bug {args.bug!r} requires the {feat} recipe but "
+                    f"--recipe {args.recipe} was given")
+            recipe = forced
+    if recipe == "pp" or recipe.startswith("fp8"):
+        # single-controller recipes: refuse explicit shard_map flags
+        # instead of silently dropping them
+        ignored = [f for f, on in (("--dp", args.dp is not None),
+                                   ("--cp", args.cp is not None),
+                                   ("--tp", args.tp is not None),
+                                   ("--sp", args.sp),
+                                   ("--zero1", args.zero1)) if on]
+        if ignored:
+            raise SystemExit(f"recipe {recipe!r} is single-controller — "
+                             f"{' '.join(ignored)} cannot apply")
+        # ... and only express bugs that require their own feature (the pp
+        # candidate consults bugs for the stage division, fp8 for the cast;
+        # a shard_map-side bug would be a silent no-op here)
+        feat = "pp" if recipe == "pp" else "fp8"
+        if args.bug and feat not in requires:
+            raise SystemExit(
+                f"bug {args.bug!r} is not implemented by the {recipe!r} "
+                f"candidate — it injects into the shard_map path")
+    if recipe == "pp":
+        if args.pp < 2:
+            raise SystemExit("--recipe pp needs --pp >= 2 stages")
+        pcfg = ParallelConfig(pp=args.pp, bugs=bugs)
+    elif recipe.startswith("fp8"):
+        pcfg = ParallelConfig(fp8=recipe.split("-", 1)[1], bugs=bugs)
+    else:
+        cp = args.cp if args.cp is not None else (2 if "cp" in requires
+                                                  else 1)
+        pcfg = ParallelConfig(
+            dp=args.dp if args.dp is not None else 2, cp=cp,
+            tp=args.tp if args.tp is not None else 2,
+            sp=args.sp or "sp" in requires,
+            zero1=args.zero1 or recipe == "zero1" or "zero1" in requires,
+            bugs=bugs)
+    # a bug the built candidate cannot express would silently "pass":
+    # refuse instead of reporting a meaningless clean run ("moe" is an
+    # arch-side feature — satisfied by the MODEL, so only exempt it when
+    # the arch actually has MoE blocks to inject into)
+    features = pcfg.features | ({"moe"} if arch_is_moe else set())
+    missing = set(requires) - features
+    if missing:
+        raise SystemExit(
+            f"bug {args.bug!r} requires {sorted(missing)} which recipe "
+            f"{recipe!r} (arch {args.arch!r}) cannot express — pick a "
+            f"matching --recipe / --arch / flags")
+    return recipe, pcfg
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--arch", default=None,
+                    help="arch config name (default tinyllama-1.1b, or "
+                         "mixtral-8x7b for --recipe moe)")
+    ap.add_argument("--recipe", default=None, choices=RECIPES,
+                    help="candidate recipe: shard_map dense/moe/zero1, "
+                         "staged pipeline, or an fp8 scaling recipe "
+                         "(default dense; a --bug requiring pp/fp8 pulls "
+                         "that recipe in)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
@@ -42,14 +114,23 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--bug", default=None,
                     help="registry bug id to inject into the candidate")
-    ap.add_argument("--dp", type=int, default=2)
-    ap.add_argument("--cp", type=int, default=1)
-    ap.add_argument("--tp", type=int, default=2)
+    ap.add_argument("--dp", type=int, default=None,
+                    help="data-parallel size (shard_map recipes; default 2)")
+    ap.add_argument("--cp", type=int, default=None,
+                    help="context-parallel size (default 1, or 2 when the "
+                         "bug requires cp)")
+    ap.add_argument("--tp", type=int, default=None,
+                    help="tensor-parallel size (default 2)")
+    ap.add_argument("--pp", type=int, default=2,
+                    help="pipeline stages for --recipe pp")
     ap.add_argument("--sp", action="store_true")
     ap.add_argument("--zero1", action="store_true")
     ap.add_argument("--check-every", type=int, default=1)
     ap.add_argument("--async-window", type=int, default=2,
                     help="in-flight online checks (0 = synchronous)")
+    ap.add_argument("--reestimate-every", type=int, default=0,
+                    help="re-estimate thresholds on the live batch every R "
+                         "steps (0 = step-0 estimate + constant widening)")
     ap.add_argument("--ckpt-every", type=int, default=4)
     ap.add_argument("--ring-window", type=int, default=4)
     ap.add_argument("--no-spill", action="store_true")
@@ -66,12 +147,21 @@ def main(argv=None):
     from repro.supervise import Supervisor, SuperviseConfig
 
     spec = BUGS[args.bug] if args.bug else None
+    if args.arch is None:
+        args.arch = ("mixtral-8x7b" if args.recipe == "moe"
+                     else "tinyllama-1.1b")
     cfg = get_config(args.arch)
+    if args.recipe == "moe" and cfg.arch_type != "moe":
+        # an explicit non-MoE --arch is refused, never silently replaced
+        raise SystemExit(f"--recipe moe needs an MoE arch "
+                         f"(e.g. mixtral-8x7b); got --arch {args.arch} "
+                         f"[{cfg.arch_type}]")
     if args.reduced:
         cfg = cfg.reduced()
-    # the distributed candidate implements the GPT/Llama/MoE families
+    # the candidate recipes implement the GPT/Llama/MoE families
     cfg = dataclasses.replace(cfg, tie_embeddings=True)
-    pcfg = build_pcfg(args, set(spec.requires) if spec else set())
+    recipe, pcfg = build_pcfg(args, set(spec.requires) if spec else set(),
+                              arch_is_moe=cfg.arch_type == "moe")
 
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
@@ -79,15 +169,18 @@ def main(argv=None):
     scfg = SuperviseConfig(
         steps=args.steps, check_every=args.check_every,
         async_window=args.async_window, ckpt_every=args.ckpt_every,
+        reestimate_every=args.reestimate_every,
         ring_window=args.ring_window, spill=not args.no_spill,
         localize=not args.no_localize,
         stop_on_flag=not args.no_stop_on_flag,
         work_dir=args.work_dir, seed=args.seed)
 
     print(f"supervising {cfg.name} ({'reduced' if args.reduced else 'full'}) "
-          f"over {args.steps} steps: dp={pcfg.dp} cp={pcfg.cp} tp={pcfg.tp} "
-          f"sp={pcfg.sp} zero1={pcfg.zero1} "
-          f"async_window={args.async_window} check_every={args.check_every}")
+          f"over {args.steps} steps: recipe={recipe} dp={pcfg.dp} "
+          f"cp={pcfg.cp} tp={pcfg.tp} pp={pcfg.pp} sp={pcfg.sp} "
+          f"zero1={pcfg.zero1} fp8={pcfg.fp8} "
+          f"async_window={args.async_window} check_every={args.check_every} "
+          f"reestimate_every={args.reestimate_every}")
     if spec:
         print(f"injected: {spec.bug_id} [{spec.btype}] — {spec.description}")
 
@@ -96,7 +189,8 @@ def main(argv=None):
     res = sup.run()
     print()
     print(res.summary())
-    print(f"  checked {len(res.checks)} steps, "
+    print(f"  recipe={sup.candidate.name} eps={sup.eps:.2e}, "
+          f"checked {len(res.checks)} steps, "
           f"{res.timings.get('steps_per_s', 0):.2f} supervised steps/s "
           f"(pipeline peak in-flight {sup.pipe.max_in_flight}, "
           f"ring: {len(sup.ring.in_memory)} in mem / "

@@ -62,11 +62,26 @@ def swiglu_mlp_init(rng, d_model, d_ff, dtype, out_scale=None):
     }
 
 
-def swiglu_mlp(p, x, ctx=None):
+def _mlp_linear(precision):
+    """The matmul the MLPs use: plain, or FP8-quantized per the recipe."""
+    if precision is None or not precision.fp8_recipe:
+        return linear
+    from repro.precision.fp8 import fp8_linear
+
+    def lin(p, x):
+        return fp8_linear(p, x, recipe=precision.fp8_recipe,
+                          stale_scale=precision.stale_scale,
+                          use_kernel=precision.use_kernel)
+
+    return lin
+
+
+def swiglu_mlp(p, x, ctx=None, precision=None):
     ctx = ensure_ctx(ctx)
+    lin = _mlp_linear(precision)
     x = ctx.tap("input", x)
-    h = jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x)
-    y = linear(p["down"], h)
+    h = jax.nn.silu(lin(p["gate"], x)) * lin(p["up"], x)
+    y = lin(p["down"], h)
     return ctx.tap("output", y)
 
 
@@ -78,11 +93,12 @@ def gelu_mlp_init(rng, d_model, d_ff, dtype, out_scale=None):
     }
 
 
-def gelu_mlp(p, x, ctx=None):
+def gelu_mlp(p, x, ctx=None, precision=None):
     ctx = ensure_ctx(ctx)
+    lin = _mlp_linear(precision)
     x = ctx.tap("input", x)
-    h = jax.nn.gelu(linear(p["fc1"], x))
-    y = linear(p["fc2"], h)
+    h = jax.nn.gelu(lin(p["fc1"], x))
+    y = lin(p["fc2"], h)
     return ctx.tap("output", y)
 
 

@@ -125,8 +125,10 @@ def block_init(rng, cfg: ArchConfig, kind: str, dtype):
 
 
 def block_apply(p, cfg: ArchConfig, kind: str, x, ctx, cache=None, pos=None,
-                decode=False, use_kernel=False):
-    """Returns (x, aux_loss, new_cache)."""
+                decode=False, use_kernel=False, precision=None):
+    """Returns (x, aux_loss, new_cache).  ``precision`` (an optional
+    ``repro.precision.fp8.Precision``) routes the MLP matmuls through the
+    FP8 recipe; everything else stays in the compute dtype."""
     ctx = ensure_ctx(ctx)
     aux = jnp.zeros((), jnp.float32)
     if kind in ("attn_mlp", "attn_dense_mlp", "attn_moe", "shared_attn"):
@@ -152,9 +154,9 @@ def block_apply(p, cfg: ArchConfig, kind: str, x, ctx, cache=None, pos=None,
             if kind == "attn_moe":
                 mo, aux = moe_mod.moe_forward(p["mlp"], cfg, h, ctx=ctx)
             elif cfg.arch_type == "audio":
-                mo = gelu_mlp(p["mlp"], h, ctx=ctx)
+                mo = gelu_mlp(p["mlp"], h, ctx=ctx, precision=precision)
             else:
-                mo = swiglu_mlp(p["mlp"], h, ctx=ctx)
+                mo = swiglu_mlp(p["mlp"], h, ctx=ctx, precision=precision)
         x = x + mo
         return x, aux, cache
     if kind == "rwkv":
@@ -273,7 +275,7 @@ class Model:
 
     # ---- forward --------------------------------------------------------------
     def apply_blocks(self, params, h, ctx=None, caches=None, pos=None,
-                     decode=False, use_kernel=False):
+                     decode=False, use_kernel=False, precision=None):
         cfg = self.cfg
         ctx = ensure_ctx(ctx)
         aux_total = jnp.zeros((), jnp.float32)
@@ -291,7 +293,8 @@ class Model:
                     with ctx.scope(scope):
                         h, aux, nc = block_apply(
                             bp, cfg, seg.kind, h, ctx, cache=bc, pos=pos,
-                            decode=decode, use_kernel=use_kernel)
+                            decode=decode, use_kernel=use_kernel,
+                            precision=precision)
                     h = constrain(h, "btd")
                     aux_total += aux
                     ncs.append(nc)
@@ -302,7 +305,8 @@ class Model:
                     bp, bc = xs
                     hh, aux, nc = block_apply(bp, cfg, seg.kind, hh, None,
                                               cache=bc, pos=pos, decode=decode,
-                                              use_kernel=use_kernel)
+                                              use_kernel=use_kernel,
+                                              precision=precision)
                     # note: no sharding constraint here — inside a rematted
                     # scan body the constrained copy of the carry would be
                     # saved ALONGSIDE the carry itself (2x activation saves);
@@ -323,15 +327,18 @@ class Model:
         h = ctx.tap("final_norm_out", h) if ctx.mode != "off" else h
         return h, aux_total, new_caches
 
-    def forward(self, params, batch, ctx=None, use_kernel=False):
+    def forward(self, params, batch, ctx=None, use_kernel=False,
+                precision=None):
         h = self.embed(params, batch, ctx)
-        h, aux, _ = self.apply_blocks(params, h, ctx, use_kernel=use_kernel)
+        h, aux, _ = self.apply_blocks(params, h, ctx, use_kernel=use_kernel,
+                                      precision=precision)
         return h, aux
 
     # ---- loss -------------------------------------------------------------------
-    def loss(self, params, batch, ctx=None, use_kernel=False):
+    def loss(self, params, batch, ctx=None, use_kernel=False, precision=None):
         cfg = self.cfg
-        h, aux = self.forward(params, batch, ctx, use_kernel=use_kernel)
+        h, aux = self.forward(params, batch, ctx, use_kernel=use_kernel,
+                              precision=precision)
         e = (params["embedding"]["word_embeddings"]
              if cfg.tie_embeddings else params.get("lm_head"))
         labels = batch["labels"]

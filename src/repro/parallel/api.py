@@ -22,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass, field
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -60,10 +61,14 @@ class ParallelConfig:
     tp: int = 1
     sp: bool = False
     zero1: bool = False
+    pp: int = 1                  # staged pipeline candidate (parallel.pp)
+    fp8: Optional[str] = None    # FP8 recipe: global | per_tensor | tile128
     bugs: frozenset = frozenset()
 
     @property
     def n_devices(self):
+        # pp and fp8 are single-controller candidate recipes — they model
+        # semantics (stage division, quantization), not device placement
         return self.dp * self.cp * self.tp
 
     @property
@@ -74,7 +79,20 @@ class ParallelConfig:
         if self.tp > 1: f.add("tp")
         if self.sp: f.add("sp")
         if self.zero1: f.add("zero1")
+        if self.pp > 1: f.add("pp")
+        if self.fp8: f.add("fp8")
         return f
+
+    @property
+    def recipe_kind(self) -> str:
+        """Which candidate implementation drives this config."""
+        if self.fp8 and self.pp > 1:
+            raise ValueError("pp + fp8 in one candidate is not supported")
+        if self.fp8:
+            return "fp8"
+        if self.pp > 1:
+            return "pp"
+        return "shard_map"
 
 
 def make_device_mesh(pcfg: ParallelConfig) -> Mesh:
@@ -247,6 +265,54 @@ def clear_step_cache():
     """Drop cached compiled candidate steps (tests / mesh reconfiguration)."""
     _TAP_CACHE.clear()
     _STEP_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# Recipe dispatch (pp / fp8 candidates share the supervisor contract)
+# ---------------------------------------------------------------------------
+
+def _check_recipe_pcfg(cfg: ArchConfig, pcfg: ParallelConfig) -> None:
+    if pcfg.dp * pcfg.cp * pcfg.tp != 1 or pcfg.zero1 or pcfg.sp:
+        raise ValueError(
+            f"the {pcfg.recipe_kind} candidate is a single-controller "
+            f"recipe — combine it with dp/cp/tp/zero1 is not supported "
+            f"(got {pcfg})")
+    if cfg.arch_type != "dense":
+        # fp8 quantizes the dense MLP matmuls only (MoE expert matmuls are
+        # a ROADMAP follow-up) and the pp loss partitions homogeneous
+        # attn_mlp stacks; running other arches would be a silent no-op —
+        # the injected bug never expresses and a clean PASS means nothing
+        raise ValueError(
+            f"the {pcfg.recipe_kind} candidate covers dense arches only "
+            f"(got arch_type={cfg.arch_type!r})")
+
+
+def _recipe_runner(cfg: ArchConfig, pcfg: ParallelConfig, ref_params,
+                   opt=None, opt_state=None):
+    _check_recipe_pcfg(cfg, pcfg)
+    from repro.models.model import Model
+    model = Model(cfg)
+    if pcfg.recipe_kind == "pp":
+        from repro.parallel.pp import make_pp_runner
+        return make_pp_runner(model, ref_params, pcfg.pp, opt=opt,
+                              opt_state=opt_state, bugs=pcfg.bugs)
+    from repro.precision.fp8 import make_fp8_runner
+    return make_fp8_runner(model, ref_params, pcfg.fp8, opt=opt,
+                           opt_state=opt_state, bugs=pcfg.bugs)
+
+
+def _recipe_train_step(cfg: ArchConfig, pcfg: ParallelConfig, ref_params,
+                       opt, batch):
+    _check_recipe_pcfg(cfg, pcfg)
+    from repro.models.model import Model
+    model = Model(cfg)
+    if pcfg.recipe_kind == "pp":
+        from repro.parallel.pp import make_pp_train_step
+        return make_pp_train_step(model, ref_params, opt, batch, pcfg.pp,
+                                  bugs=pcfg.bugs)
+    from repro.precision.fp8 import make_fp8_train_step
+    return make_fp8_train_step(model, ref_params, opt, batch, pcfg.fp8,
+                               bugs=pcfg.bugs)
 
 
 # ---------------------------------------------------------------------------
@@ -425,7 +491,11 @@ class _Plumbing:
 def make_candidate_runner(cfg: ArchConfig, pcfg: ParallelConfig,
                           ref_params: dict, opt=None, opt_state=None,
                           jit: bool = True):
-    """Build ``runner(batch, rewrites) -> Trace`` for the distributed GPT."""
+    """Build ``runner(batch, rewrites) -> Trace`` for the candidate recipe:
+    the shard_map distributed GPT, or (dispatching on ``pcfg``) the staged
+    pipeline / FP8 candidates."""
+    if pcfg.recipe_kind != "shard_map":
+        return _recipe_runner(cfg, pcfg, ref_params, opt, opt_state)
     pl = _Plumbing(cfg, pcfg, ref_params)
     bugs = pcfg.bugs
 
@@ -513,7 +583,13 @@ def make_candidate_train_step(cfg: ArchConfig, pcfg: ParallelConfig,
     sharding internally.  Returns ``(step, params0, opt_state0)`` with
     ``step(params, opt_state, batch) -> (Trace, new_params, new_opt_state)``.
     Trace sections stay device-resident; loss/grad_norm stay device scalars.
+
+    Dispatches on ``pcfg.recipe_kind``: the pipeline-parallel and FP8
+    candidates return their own once-compiled steps under the same contract
+    (``parallel.pp`` / ``precision.fp8``).
     """
+    if pcfg.recipe_kind != "shard_map":
+        return _recipe_train_step(cfg, pcfg, ref_params, opt, batch)
     pl = _Plumbing(cfg, pcfg, ref_params)
     bugs = pcfg.bugs
     tap_key, names, ti, pspecs, probes, probe_specs = pl.taps_for(

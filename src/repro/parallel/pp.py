@@ -5,16 +5,22 @@ schedule, but pipeline parallelism's *semantic* content — which stage owns
 which layers, and how stage-local layer indices map back to the reference
 numbering (paper Fig 5) — is fully modeled here:
 
-* ``stage_division`` computes each stage's [start, end) global layer range;
-  with ``pp_wrong_stage_division`` injected, boundaries are computed with a
+* ``stage_division`` computes each stage's [start, end) global layer range,
+  distributing any remainder one-per-stage from the front (Megatron-style
+  uneven PP) so every layer runs exactly once for ANY (L, pp); with
+  ``pp_wrong_stage_division`` injected, boundaries are computed with a
   rounded layers-per-stage (the classic ``ceil(L/pp)`` bug): one layer is
   executed twice at a stage boundary and another never runs — silent, loss
   still decreases, the model is simply wrong (paper bug 10).
-* ``make_pp_runner`` executes the model stage by stage with STAGE-LOCAL
-  layer numbering, then canonicalizes tap names via
-  ``canonical_layer_index`` so the trace aligns with the single-device
-  reference — exercising the paper's canonical-module-name machinery on a
-  real trace rather than only in unit tests.
+* ``stage_layer_table`` precomputes, once, the (executed layer, canonical
+  name index) pairs in execution order — the STAGE-LOCAL → global renaming
+  (``canonical_layer_index``) that both the one-shot runner and the
+  supervisor's once-compiled train step bake into their traced loss, so the
+  mapping is preserved bit-for-bit across supervised steps.
+* ``make_pp_runner`` executes the model stage by stage with stage-local
+  numbering and canonical tap names aligned with the single-device
+  reference; ``make_pp_train_step`` is the once-jitted stateful FULL train
+  step (the supervisor's ``CandidateStep`` contract for ``--recipe pp``).
 """
 from __future__ import annotations
 
@@ -23,8 +29,7 @@ import math
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.canonical import canonical_layer_index
-from repro.core.collector import Trace, trace_fn_step
+from repro.core.collector import Trace, make_trace_step, trace_fn_step
 from repro.core.tap import ensure_ctx
 from repro.models.model import Model, block_apply
 
@@ -43,8 +48,73 @@ def stage_division(n_layers: int, pp_size: int,
             end = min(start + cpl, n_layers)
             out.append((start, end))
         return out
-    cpl = n_layers // pp_size
-    return [(r * cpl, (r + 1) * cpl) for r in range(pp_size)]
+    # exact partition: base layers per stage, remainder distributed
+    # one-per-stage from the front (Megatron uneven pipeline division) —
+    # floor alone would silently drop the last L % pp layers
+    base, rem = divmod(n_layers, pp_size)
+    out, start = [], 0
+    for r in range(pp_size):
+        end = start + base + (1 if r < rem else 0)
+        out.append((start, end))
+        start = end
+    return out
+
+
+def stage_layer_table(n_layers: int, pp_size: int,
+                      bugs=frozenset()) -> list[tuple[int, int]]:
+    """Static ``(executed_layer, canonical_index)`` pairs in execution order.
+
+    The canonical index is reconstructed from (pp_rank, local index) under
+    the CORRECT division — exactly the renaming a per-rank trace would apply
+    (paper Fig 5; for divisible layer counts it coincides with
+    ``core.canonical.canonical_layer_index``) — so when the injected bug
+    shifts the executed ranges the names stay put and the trace misaligns
+    with the reference.  Buggy
+    overlapping stages can claim an already-used canonical index on uneven
+    divisions; those spill to fresh indices >= L (absent from the reference,
+    reported as extra candidate tensors) instead of colliding in one trace.
+    """
+    stages = stage_division(n_layers, pp_size, bugs)
+    correct = stage_division(n_layers, pp_size)
+    table, used, overflow = [], set(), n_layers
+    for pp_rank, (start, end) in enumerate(stages):
+        for local_idx in range(end - start):
+            # the correct stage's offset + local index; for divisible L this
+            # equals canonical_layer_index(local_idx, pp_rank, pp_size, 0, 1)
+            # (asserted by the property tests against core.canonical)
+            canon = correct[pp_rank][0] + local_idx
+            if canon in used:
+                canon, overflow = overflow, overflow + 1
+            used.add(canon)
+            table.append((start + local_idx, canon))
+    return table
+
+
+def _pp_loss_call(model: Model, pp_size: int, bugs=frozenset()):
+    """``loss_call(params, batch, ctx)`` for the stage-partitioned candidate
+    with canonical (global) tap names baked in — shared by the one-shot
+    runner and the once-compiled supervised step."""
+    cfg = model.cfg
+    table = stage_layer_table(cfg.n_layers, pp_size, bugs)
+
+    def loss_call(p, batch, ctx):
+        ctx = ensure_ctx(ctx)
+        h = model.embed(p, batch, ctx)
+        from repro.models.layers import rmsnorm
+        aux = jnp.zeros((), jnp.float32)
+        for executed, canon in table:
+            with ctx.scope(f"layers.{canon}"):
+                h, a, _ = block_apply(p["layers"][executed], cfg,
+                                      "attn_mlp", h, ctx)
+            aux = aux + a
+        h = rmsnorm(p["final_norm"], h)
+        h = ctx.tap("final_norm_out", h)
+        e = (p["embedding"]["word_embeddings"] if cfg.tie_embeddings
+             else p["lm_head"])
+        from repro.models.layers import cross_entropy, _logits
+        return cross_entropy(_logits(h, e), batch["labels"]) + aux
+
+    return loss_call
 
 
 def make_pp_runner(model: Model, params, pp_size: int, opt=None,
@@ -54,31 +124,7 @@ def make_pp_runner(model: Model, params, pp_size: int, opt=None,
     Tap names use canonical (global) layer indices reconstructed from
     (pp_rank, local index) — identical to the reference's names when the
     division is correct."""
-    cfg = model.cfg
-    L = cfg.n_layers
-    stages = stage_division(L, pp_size, bugs)
-
-    def loss_call(p, batch, ctx):
-        ctx = ensure_ctx(ctx)
-        h = model.embed(p, batch, ctx)
-        from repro.models.layers import rmsnorm
-        aux = jnp.zeros((), jnp.float32)
-        for pp_rank, (start, end) in enumerate(stages):
-            for local_idx in range(end - start):
-                executed = start + local_idx           # the layer that RUNS
-                canon = canonical_layer_index(
-                    local_idx, pp_rank, pp_size, 0, 1,
-                    n_layers=L) if L % pp_size == 0 else executed
-                with ctx.scope(f"layers.{canon}"):
-                    h, a, _ = block_apply(p["layers"][executed], cfg,
-                                          "attn_mlp", h, ctx)
-                aux = aux + a
-        h = rmsnorm(p["final_norm"], h)
-        h = ctx.tap("final_norm_out", h)
-        e = (p["embedding"]["word_embeddings"] if cfg.tie_embeddings
-             else p["lm_head"])
-        from repro.models.layers import cross_entropy, _logits
-        return cross_entropy(_logits(h, e), batch["labels"]) + aux
+    loss_call = _pp_loss_call(model, pp_size, bugs)
 
     def run(batch, rewrites=None) -> Trace:
         tr, _, _ = trace_fn_step(loss_call, params, batch, opt=opt,
@@ -86,3 +132,18 @@ def make_pp_runner(model: Model, params, pp_size: int, opt=None,
         return tr
 
     return run
+
+
+def make_pp_train_step(model: Model, ref_params, opt, batch, pp_size: int,
+                       bugs=frozenset()):
+    """Once-compiled stateful PP candidate train step (supervisor contract).
+
+    Returns ``(step, params0, opt_state0)`` with ``step(params, opt_state,
+    batch) -> (Trace, new_params, new_opt_state)`` — one jitted callable,
+    the stage-local → canonical tap renaming traced in, reused verbatim
+    every supervised step and bisection replay."""
+    import jax
+    loss_call = _pp_loss_call(model, pp_size, bugs)
+    step = make_trace_step(loss_call, opt, ref_params, batch)
+    params0 = jax.tree.map(jnp.asarray, ref_params)
+    return step, params0, opt.init(params0)

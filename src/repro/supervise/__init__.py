@@ -17,7 +17,8 @@ online:
 """
 from repro.supervise.bisect import BisectResult, bisect_first_bad  # noqa: F401
 from repro.supervise.pipeline import (  # noqa: F401
-    SUPERVISED_KIND_MULT, AsyncCheckPipeline, StepCheck)
+    REESTIMATED_KIND_MULT, SUPERVISED_KIND_MULT, AsyncCheckPipeline,
+    StepCheck)
 from repro.supervise.runner import (  # noqa: F401
-    SuperviseConfig, SuperviseResult, Supervisor)
+    CandidateStep, SuperviseConfig, SuperviseResult, Supervisor)
 from repro.supervise.store import TraceRing, load_trace, save_trace  # noqa: F401

@@ -19,7 +19,16 @@ Two-phase search, O(log C) cheap probes + one bounded replay:
    lockstep loop with synchronous per-step checking until a step flags.
    Replay is deterministic (stateless data generator + bit-exact restore +
    the same compiled steps), so the first flagged replay step IS the first
-   bad step of the original run.
+   bad step of the original run.  Both the divergence probe and the replay
+   checks evaluate each step against the pipeline's threshold schedule for
+   THAT step (``AsyncCheckPipeline.thresholds_for`` — with periodic
+   re-estimation, the epoch the step originally trained under), so the
+   replay verdicts reproduce the online ones.
+
+The probe and replay are recipe-agnostic: they only assume the candidate's
+persistent state is a ``(params, opt_state)`` pytree with reference-named
+param leaves — true for the shard_map, pipeline-parallel and FP8
+``CandidateStep`` implementations alike.
 
 The resulting step report is then handed to the existing localization
 machinery (propagation/backward/optimizer modes, and rewrite-mode

@@ -18,15 +18,24 @@ The window is the backpressure bound: at most ``window`` step reductions
 resolves the oldest entry first, so device memory for pending checks stays
 O(window), never O(run length).
 
-Thresholds are estimated once at step 0 (paper §5); multi-step checking
-needs two allowances on top:
+Thresholds are estimated at step 0 (paper §5) and — when the supervisor's
+periodic re-estimation is on — refreshed every R steps from the live batch
+and swapped in as a new *threshold epoch* (``swap_thresholds``).  Each
+check resolves against the epoch active at its OWN step, so late async
+resolutions and bisection replays see the schedule the step trained under.
+Multi-step checking needs two allowances on top of the estimates:
 
 * per-step kinds (activations / gradients) see batch-to-batch variation of
   the true FP-noise level that a single-batch estimate misses — measured at
   up to ~8x on clean runs — so they get a constant widening
-  (``SUPERVISED_KIND_MULT``, bug errors sit ~100-1000x above thresholds);
+  (``SUPERVISED_KIND_MULT``, bug errors sit ~100-1000x above thresholds).
+  With re-estimation the estimates track the live noise level (and only
+  ever widen, ``Thresholds.union``), so the widening tightens to
+  ``REESTIMATED_KIND_MULT`` — back toward the paper's single-step 8x;
 * both sides accumulate independent round-off as states evolve, so every
-  threshold additionally grows by ``1 + drift_alpha * step``.
+  threshold additionally grows by ``1 + drift_alpha * step`` (anchored at
+  step 0: accumulated ref/cand divergence never resets, re-estimation or
+  not).
 
 ``param_post_step`` keeps multiplier 1.0: the post-step parameter comparison
 is cumulative state, empirically flat on clean runs (~0.1x threshold), and
@@ -54,6 +63,17 @@ SUPERVISED_KIND_MULT = {
     C.KIND_PARAM_POST: 1.0,
 }
 
+# margins under periodic re-estimation: the live union-of-estimates absorbs
+# most batch-to-batch variation, so the constant widening tightens (4-8x vs
+# 8-16x) back toward the paper's single-step margin
+REESTIMATED_KIND_MULT = {
+    C.KIND_ACT: 4.0,
+    C.KIND_ACT_GRAD: 4.0,
+    C.KIND_PARAM_GRAD: 8.0,
+    C.KIND_MAIN_GRAD: 8.0,
+    C.KIND_PARAM_POST: 1.0,
+}
+
 
 @dataclass
 class StepCheck:
@@ -72,25 +92,67 @@ class AsyncCheckPipeline:
     def __init__(self, thresholds: Thresholds, window: int = 2,
                  kinds=DEFAULT_KINDS, kind_mult=None,
                  drift_alpha: float = 0.125):
-        self.thresholds = thresholds
         self.window = max(0, int(window))
         self.kinds = kinds
-        self.kind_mult = dict(SUPERVISED_KIND_MULT if kind_mult is None
-                              else kind_mult)
         self.drift_alpha = drift_alpha
+        # threshold epochs: (from_step, thresholds, kind_mult), sorted; a
+        # step's check uses the last epoch with from_step <= step
+        self._epochs: list[tuple[int, Thresholds, dict]] = [
+            (0, thresholds, dict(SUPERVISED_KIND_MULT if kind_mult is None
+                                 else kind_mult))]
         self._inflight: deque = deque()
+        self._clock = 0            # monotone submit/poll tick counter
         self.submitted = 0
         self.resolved = 0
         self.max_in_flight = 0
 
     # ---- threshold schedule ------------------------------------------------
+    @property
+    def thresholds(self) -> Thresholds:
+        return self._epochs[-1][1]
+
+    @property
+    def kind_mult(self) -> dict:
+        return self._epochs[-1][2]
+
+    def swap_thresholds(self, thr: Thresholds, step: int,
+                        kind_mult=None) -> None:
+        """Install re-estimated thresholds for checks at steps >= ``step``.
+
+        In-flight entries from earlier steps keep resolving against their
+        own epoch, and bisection replays of earlier steps see the schedule
+        those steps originally trained under."""
+        km = dict(self.kind_mult if kind_mult is None else kind_mult)
+        self._epochs.append((step, thr, km))
+        self._epochs.sort(key=lambda e: e[0])
+
+    def _epoch_for(self, step: int) -> tuple[int, Thresholds, dict]:
+        ep = self._epochs[0]
+        for e in self._epochs:
+            if e[0] <= step:
+                ep = e
+            else:
+                break
+        return ep
+
+    def thresholds_for(self, step: int) -> Thresholds:
+        return self._epoch_for(step)[1]
+
     def scales(self, step: int) -> dict:
         """Per-kind threshold scale at ``step``.  Step 0 compares identical
         states on the estimation batch — exact single-step semantics."""
         if step == 0:
             return {k: 1.0 for k in self.kinds}
+        mult = self._epoch_for(step)[2]
         growth = 1.0 + self.drift_alpha * step
-        return {k: self.kind_mult.get(k, 1.0) * growth for k in self.kinds}
+        return {k: mult.get(k, 1.0) * growth for k in self.kinds}
+
+    def param_post_threshold(self, name: str, step: int) -> float:
+        """Post-step parameter threshold at ``step`` — the bisection
+        probe's schedule (shared with the online checks)."""
+        thr = self.thresholds_for(step)
+        scale = self.scales(step).get(C.KIND_PARAM_POST, 1.0)
+        return thr.threshold(C.KIND_PARAM_POST, name) * scale
 
     # ---- pipeline ----------------------------------------------------------
     @property
@@ -103,7 +165,8 @@ class AsyncCheckPipeline:
         entries, la, lb, missing = collect_section_pairs(ref, cand,
                                                          self.kinds)
         dev = sq_norms_async(la, lb)
-        self._inflight.append((step, entries, missing, dev))
+        self._clock += 1
+        self._inflight.append((step, entries, missing, dev, self._clock))
         self.submitted += 1
         done = []
         while len(self._inflight) > self.window:
@@ -112,14 +175,21 @@ class AsyncCheckPipeline:
         return done
 
     def poll(self) -> list[StepCheck]:
-        """Resolve (only) entries whose device reduction already finished —
-        free progress on steps where nothing was submitted."""
+        """Resolve entries whose device reduction already finished — free
+        progress on steps where nothing was submitted.  When the device
+        array exposes no ``is_ready`` (older jax), fall back to resolving
+        entries older than the window in pipeline ticks, so the pipeline
+        still drains instead of deferring everything to ``drain()``."""
+        self._clock += 1
         done = []
         while self._inflight:
-            dev = self._inflight[0][3]
+            dev, born = self._inflight[0][3], self._inflight[0][4]
             ready = getattr(dev, "is_ready", None)
-            if ready is None or not ready():
-                break
+            if ready is not None:
+                if not ready():
+                    break
+            elif self._clock - born <= self.window:
+                break              # age fallback: not old enough yet
             done.append(self._resolve())
         return done
 
@@ -136,14 +206,14 @@ class AsyncCheckPipeline:
         entries, la, lb, missing = collect_section_pairs(ref, cand,
                                                          self.kinds)
         errs = _to_rel_err(np.asarray(sq_norms_async(la, lb), np.float64))
-        rep = report_from_errs(entries, errs, self.thresholds,
+        rep = report_from_errs(entries, errs, self.thresholds_for(step),
                                missing=missing, thr_scale=self.scales(step))
         return StepCheck(step, rep)
 
     def _resolve(self) -> StepCheck:
-        step, entries, missing, dev = self._inflight.popleft()
+        step, entries, missing, dev, _ = self._inflight.popleft()
         errs = _to_rel_err(np.asarray(dev, np.float64))
-        rep = report_from_errs(entries, errs, self.thresholds,
+        rep = report_from_errs(entries, errs, self.thresholds_for(step),
                                missing=missing, thr_scale=self.scales(step))
         self.resolved += 1
         return StepCheck(step, rep)

@@ -2,13 +2,26 @@
 
 ``Supervisor`` threads (params, opt_state) through BOTH the single-device
 reference and the distributed candidate for N steps, using exactly one
-compiled step per side (``collector.make_trace_step`` /
-``parallel.api.make_candidate_train_step`` — no re-tracing, no re-jitting
-per step), and checks every step online through the async pipeline:
+compiled step per side (``collector.make_trace_step`` / the recipe's
+``CandidateStep`` — no re-tracing, no re-jitting per step), and checks
+every step online through the async pipeline:
 
     step k trains  ->  step-k reductions enqueue on device  ->  step k+1
     trains while step k's N x 2 scalars are still in flight  ->  the
     bounded window resolves step k's report
+
+The candidate side is RECIPE-GENERIC: ``CandidateStep`` is the contract —
+a once-compiled stateful train step plus a runner factory for rewrite-mode
+localization and the recipe's machine epsilon — and ``CandidateStep.build``
+dispatches on the ``ParallelConfig`` to the shard_map candidate (dense /
+MoE / ZeRO-1), the pipeline-parallel candidate (``parallel.pp``) or the FP8
+recipes (``precision.fp8``, checked under BF16 epsilon per paper §6.7).
+
+With ``reestimate_every=R`` the supervised loop additionally re-runs the
+fused pair-step threshold estimate on the live batch every R steps and
+swaps the (union-merged) thresholds into the async pipeline — margins then
+tighten from the coarse ``SUPERVISED_KIND_MULT`` constants to
+``REESTIMATED_KIND_MULT``, back toward the paper's single-step 8x.
 
 On a flag the run is bisected to the FIRST bad step (checkpoint binary
 search + deterministic sync replay, ``supervise.bisect``) and that step is
@@ -24,21 +37,60 @@ import os
 import tempfile
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 from repro.core import canonical as C
 from repro.core.checker import Report, localize_with_rewrites
 from repro.core.collector import make_trace_step
 from repro.core.harness import make_model_runner
 from repro.core.relerr_engine import batched_rel_err
-from repro.core.thresholds import MACHINE_EPS, Thresholds, estimate_thresholds
+from repro.core.thresholds import (MACHINE_EPS, Thresholds,
+                                   estimate_thresholds, make_pair_estimator)
 from repro.data.synthetic import make_batch
 from repro.parallel.api import (ParallelConfig, make_candidate_runner,
                                 make_candidate_train_step)
 from repro.supervise.bisect import (BisectResult, CheckpointKeeper,
                                     bisect_first_bad)
-from repro.supervise.pipeline import AsyncCheckPipeline, StepCheck
+from repro.supervise.pipeline import (REESTIMATED_KIND_MULT,
+                                      AsyncCheckPipeline, StepCheck)
 from repro.supervise.store import TraceRing
+
+
+@dataclass
+class CandidateStep:
+    """The recipe-generic candidate contract the supervisor drives.
+
+    ``step(params, opt_state, batch) -> (Trace, new_params, new_opt_state)``
+    must be a ONCE-compiled stateful train step (same compiled callable
+    every supervised step and bisection replay); ``make_runner(params,
+    opt_state)`` builds the one-shot ``runner(batch, rewrites) -> Trace``
+    used for rewrite-mode localization at the first bad step; ``eps`` is
+    the machine epsilon threshold estimation should use for this recipe
+    (BF16's for FP8 recipes, paper §6.7).
+    """
+    step: Callable
+    params0: Any
+    opt_state0: Any
+    make_runner: Callable
+    eps: float = MACHINE_EPS["float32"]
+    name: str = "candidate"
+
+    @classmethod
+    def build(cls, cfg, pcfg: ParallelConfig, params, opt,
+              batch) -> "CandidateStep":
+        """Dispatch on ``pcfg`` (shard_map / pp / fp8) via ``parallel.api``."""
+        step, p0, s0 = make_candidate_train_step(cfg, pcfg, params, opt,
+                                                 batch)
+        eps = (MACHINE_EPS["float8_e4m3fn"] if pcfg.fp8
+               else MACHINE_EPS["float32"])
+        name = ("fp8-" + pcfg.fp8 if pcfg.fp8
+                else f"pp{pcfg.pp}" if pcfg.pp > 1
+                else "shard_map")
+        return cls(
+            step=step, params0=p0, opt_state0=s0,
+            make_runner=lambda p, s: make_candidate_runner(
+                cfg, pcfg, p, opt, s),
+            eps=eps, name=name)
 
 
 @dataclass
@@ -52,7 +104,8 @@ class SuperviseConfig:
     spill: bool = True          # spill evicted trace pairs to disk
     spill_keep: int = 8         # unpinned spilled steps retained on disk
     drift_alpha: float = 0.125  # per-step threshold growth allowance
-    eps: float = MACHINE_EPS["float32"]
+    reestimate_every: int = 0   # re-run the fused pair estimate every R steps
+    eps: Optional[float] = None  # None = auto (recipe eps; BF16 for FP8)
     margin: float = 8.0
     localize: bool = True       # rewrite-mode localization at the bad step
     stop_on_flag: bool = True   # end the run once a resolved check flags
@@ -71,6 +124,7 @@ class SuperviseResult:
     bisection: Optional[BisectResult] = None
     localization: Optional[Report] = None        # rewrite-mode report
     thresholds: Optional[Thresholds] = None
+    reestimations: int = 0              # threshold epochs swapped in
     losses: list = field(default_factory=list)          # reference loss/step
     cand_losses: list = field(default_factory=list)
     timings: dict = field(default_factory=dict)
@@ -95,6 +149,9 @@ class SuperviseResult:
         status = "PASS" if self.passed else "FAIL"
         lines.append(f"supervised run: {status} over {self.steps_run} steps "
                      f"({len(self.checks)} checked online)")
+        if self.reestimations:
+            lines.append(f"  thresholds re-estimated {self.reestimations}x "
+                         f"on live batches")
         if self.flagged:
             lines.append(f"  first flagged (online): step "
                          f"{self.first_flagged_step}")
@@ -112,16 +169,19 @@ class SuperviseResult:
 
 
 class Supervisor:
-    """Streaming lockstep supervisor for one (model, parallelism) pairing.
+    """Streaming lockstep supervisor for one (model, recipe) pairing.
 
     ``batch_fn(step) -> batch`` defaults to the deterministic synthetic
-    generator, which is also what makes bisection replay exact.
+    generator, which is also what makes bisection replay exact.  Pass
+    ``candidate`` to drive a custom ``CandidateStep``; by default one is
+    built from ``pcfg`` (shard_map / pp / fp8).
     """
 
     def __init__(self, model, cfg, pcfg: ParallelConfig, opt,
                  params=None, scfg: Optional[SuperviseConfig] = None,
                  batch_fn: Optional[Callable[[int], dict]] = None,
                  batch_size: int = 4, seq_len: int = 32,
+                 candidate: Optional[CandidateStep] = None,
                  log_fn: Optional[Callable[[str], None]] = None):
         import jax
         self.model, self.cfg, self.pcfg, self.opt = model, cfg, pcfg, opt
@@ -147,9 +207,11 @@ class Supervisor:
             spill_dir=(os.path.join(self.work_dir, "spill")
                        if self.scfg.spill else None),
             spill_keep=self.scfg.spill_keep)
+        self.candidate = candidate
         self.pipe: Optional[AsyncCheckPipeline] = None
-        self._ref_step = self._cand_step = None
+        self._ref_step = None
         self._ref_state = self._cand_state = None
+        self._estimator = None
         self._bad_entry = None
 
     # ---- build (thresholds + compiled steps) -------------------------------
@@ -157,11 +219,20 @@ class Supervisor:
         sc = self.scfg
         batch0 = self.batch_fn(0)
         t0 = time.perf_counter()
+        if self.candidate is None:
+            self.candidate = CandidateStep.build(self.cfg, self.pcfg,
+                                                 self.params0, self.opt,
+                                                 batch0)
+        eps = sc.eps if sc.eps is not None else self.candidate.eps
+        self.eps = eps
         ref_runner = make_model_runner(self.model, self.params0, self.opt,
                                        self.opt.init(self.params0))
-        thr, _ = estimate_thresholds(ref_runner, batch0, sc.eps, sc.margin,
+        thr, _ = estimate_thresholds(ref_runner, batch0, eps, sc.margin,
                                      sc.seed)
         t_thr = time.perf_counter() - t0
+        # margins start at the constant widening either way: until the first
+        # live re-estimation lands, only the step-0 estimate exists and the
+        # full batch-to-batch allowance is still needed
         self.pipe = AsyncCheckPipeline(thr, window=sc.async_window,
                                        drift_alpha=sc.drift_alpha)
 
@@ -171,12 +242,31 @@ class Supervisor:
         t0 = time.perf_counter()
         self._ref_step = make_trace_step(loss_call, self.opt, self.params0,
                                          batch0)
-        self._cand_step, cp0, cs0 = make_candidate_train_step(
-            self.cfg, self.pcfg, self.params0, self.opt, batch0)
+        if sc.reestimate_every:
+            self._estimator = make_pair_estimator(
+                loss_call, self.opt, self.params0, batch0, eps, sc.margin,
+                sc.seed)
         self._ref_state = (self.params0, self.opt.init(self.params0))
-        self._cand_state = (cp0, cs0)
+        self._cand_state = (self.candidate.params0,
+                            self.candidate.opt_state0)
         t_build = time.perf_counter() - t0
         return thr, {"thresholds_s": t_thr, "build_s": t_build}
+
+    # ---- periodic threshold re-estimation ----------------------------------
+    def _reestimate(self, k: int, rp, rs, batch, res: SuperviseResult):
+        t0 = time.perf_counter()
+        fresh = self._estimator(rp, rs, batch, step=k)
+        merged = self.pipe.thresholds.union(fresh)
+        # from the first live estimate on, the union tracks the real noise
+        # level and the constant widening tightens to the re-estimated
+        # multipliers (steps before this keep SUPERVISED_KIND_MULT)
+        self.pipe.swap_thresholds(merged, step=k,
+                                  kind_mult=REESTIMATED_KIND_MULT)
+        res.reestimations += 1
+        res.timings["reestimate_s"] = (res.timings.get("reestimate_s", 0.0)
+                                       + time.perf_counter() - t0)
+        self.log(f"  [supervise] step {k}: thresholds re-estimated on the "
+                 f"live batch (epoch {res.reestimations})")
 
     # ---- main loop ---------------------------------------------------------
     def run(self) -> SuperviseResult:
@@ -185,8 +275,10 @@ class Supervisor:
         res = SuperviseResult(flagged=False, steps_run=0,
                               first_flagged_step=None, first_bad_step=None,
                               thresholds=thr, work_dir=self.work_dir)
+        res.timings = timings
         rp, rs = self._ref_state
         cp, cs = self._cand_state
+        cand_step = self.candidate.step
         flagged_steps: list[int] = []
         t_loop = time.perf_counter()
         t_warm = None          # set once compile-bearing first steps are done
@@ -199,8 +291,11 @@ class Supervisor:
             if k % sc.ckpt_every == 0:
                 self.keeper.save(k, (rp, rs), (cp, cs))
             batch = self.batch_fn(k)
+            if (sc.reestimate_every and k
+                    and k % sc.reestimate_every == 0):
+                self._reestimate(k, rp, rs, batch, res)
             ref_tr, rp, rs = self._ref_step(rp, rs, batch)
-            cand_tr, cp, cs = self._cand_step(cp, cs, batch)
+            cand_tr, cp, cs = cand_step(cp, cs, batch)
             res.losses.append(ref_tr.loss)
             res.cand_losses.append(cand_tr.loss)
             if k % sc.check_every == 0:
@@ -257,12 +352,12 @@ class Supervisor:
     # ---- diagnosis: bisect + localize --------------------------------------
     def _params_diverged(self, ckpt_step: int) -> bool:
         # host-only probe: just the two param trees, no opt state, no
-        # device placement — O(log C) of these run per bisection
+        # device placement — O(log C) of these run per bisection.  The
+        # threshold schedule (epoch + drift growth) is the pipeline's, so
+        # the probe agrees with the online checks of that step.
         rp, cp = self.keeper.load_params_named(ckpt_step)
         errs = batched_rel_err(rp, cp)
-        thr = self.pipe.thresholds
-        growth = 1.0 + self.pipe.drift_alpha * ckpt_step
-        return any(e > thr.threshold(C.KIND_PARAM_POST, n) * growth
+        return any(e > self.pipe.param_post_threshold(n, ckpt_step)
                    for n, e in errs.items())
 
     def _replay(self, start: int, end: int):
@@ -271,12 +366,13 @@ class Supervisor:
         step for localization."""
         (rp, rs), (cp, cs) = self.keeper.load(start, self._ref_state,
                                               self._cand_state)
+        cand_step = self.candidate.step
         self._bad_entry = None
         for k in range(start, end + 1):
             entry = ((rp, rs), (cp, cs))
             batch = self.batch_fn(k)
             ref_tr, rp, rs = self._ref_step(rp, rs, batch)
-            cand_tr, cp, cs = self._cand_step(cp, cs, batch)
+            cand_tr, cp, cs = cand_step(cp, cs, batch)
             chk = self.pipe.check_sync(k, ref_tr, cand_tr)
             if chk.flagged:
                 self._bad_entry = (entry, ref_tr)
@@ -301,8 +397,7 @@ class Supervisor:
         # single-step workflow (paper §3 step 5)
         ((rp, rs), (cp, cs)), ref_tr = self._bad_entry
         ref_runner = make_model_runner(self.model, rp, self.opt, rs)
-        cand_runner = make_candidate_runner(self.cfg, self.pcfg, cp,
-                                            self.opt, cs)
+        cand_runner = self.candidate.make_runner(cp, cs)
         res.localization = localize_with_rewrites(
             ref_runner, cand_runner, self.batch_fn(res.first_bad_step),
-            ref_tr, self.pipe.thresholds)
+            ref_tr, self.pipe.thresholds_for(res.first_bad_step))

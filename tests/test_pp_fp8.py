@@ -1,11 +1,17 @@
 """Dedicated paths for the two remaining Table-1 rows: PP stage division
-(bug 10) and the FP8 stale-scale cast (bug 8)."""
+(bug 10) and the FP8 stale-scale cast (bug 8) — one-shot checks AND the
+recipe-generic streaming supervisor driving both candidates."""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs.base import get_config
 from repro.core.collector import trace_fn_step
@@ -14,7 +20,8 @@ from repro.core.tap import ensure_ctx
 from repro.core.thresholds import MACHINE_EPS
 from repro.data.synthetic import make_batch
 from repro.models.model import Model
-from repro.parallel.pp import make_pp_runner, stage_division
+from repro.parallel.pp import (make_pp_runner, stage_division,
+                               stage_layer_table)
 from repro.precision.fp8 import fp8_linear
 
 
@@ -39,10 +46,56 @@ def test_stage_division_correct_and_buggy():
     assert s1 < e0 or e1 < 8          # overlap or dropped tail
 
 
+def test_stage_division_distributes_remainder():
+    # L=10, pp=4 used to run only 8 layers (cpl = L // pp drops the tail);
+    # the remainder now spreads one-per-stage from the front
+    assert stage_division(10, 4) == [(0, 3), (3, 6), (6, 8), (8, 10)]
+    # ... and stays distinguishable from the injected ceil-division bug
+    bad = stage_division(10, 4, bugs=frozenset(["pp_wrong_stage_division"]))
+    assert bad != stage_division(10, 4)
+    ran = sorted(i for s, e in bad for i in range(s, e))
+    assert ran != list(range(10))     # buggy division repeats/drops layers
+
+
+@settings(max_examples=60, deadline=None)
+@given(L=st.integers(1, 48), pp=st.integers(1, 12))
+def test_stage_division_covers_every_layer_exactly_once(L, pp):
+    pp = min(pp, L)
+    stages = stage_division(L, pp)
+    assert len(stages) == pp
+    ran = [i for s, e in stages for i in range(s, e)]
+    assert ran == list(range(L))      # exact, ordered, gap- and repeat-free
+    # the canonical renaming table never collides (buggy overlaps spill to
+    # fresh indices >= L instead of duplicating a tap name in one trace)
+    for bugs in (frozenset(), frozenset(["pp_wrong_stage_division"])):
+        table = stage_layer_table(L, pp, bugs)
+        canons = [c for _, c in table]
+        assert len(canons) == len(set(canons)), (L, pp, bugs, table)
+    assert [e for e, _ in stage_layer_table(L, pp)] == list(range(L))
+    if L % pp == 0:
+        # the offset renaming coincides with the paper's canonical mapping
+        from repro.core.canonical import canonical_layer_index
+        cpl = L // pp
+        for executed, canon in stage_layer_table(L, pp):
+            r, local = divmod(executed, cpl)
+            assert canon == canonical_layer_index(local, r, pp, 0, 1,
+                                                  n_layers=L)
+
+
 def test_pp_candidate_correct_division_passes(gpt4):
     cfg, m, params, batch = gpt4
     ref = make_model_runner(m, params)
     cand = make_pp_runner(m, params, pp_size=2)
+    res = ttrace_check(ref, cand, batch, localize=False)
+    assert res.passed, res.report.summary()
+
+
+def test_pp_candidate_uneven_division_passes(gpt4):
+    # 4 layers over 3 stages: sizes (2, 1, 1) — floor division would run
+    # only 3 layers and flag a clean candidate
+    cfg, m, params, batch = gpt4
+    ref = make_model_runner(m, params)
+    cand = make_pp_runner(m, params, pp_size=3)
     res = ttrace_check(ref, cand, batch, localize=False)
     assert res.passed, res.report.summary()
 
@@ -100,3 +153,99 @@ def test_fp8_stale_scale_detected_with_bf16_thresholds():
                         eps=MACHINE_EPS["bfloat16"], localize=False)
     assert not res2.passed                 # stale amax cast flagged
     assert res2.report.localized.startswith("layers.0.mlp")
+
+
+def test_fp8_matmul_tile128_kernel_matches_dequant():
+    """The tile128 branch used to dispatch the Pallas kernel and then throw
+    the result away; now the kernel applies the per-128-tile scales inside
+    the K loop and must agree with the per-element dequant path."""
+    from repro.precision.fp8 import fp8_matmul
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 384))
+    w = jax.random.normal(jax.random.PRNGKey(1), (384, 128))
+    ref = fp8_matmul(x, w, recipe="tile128")
+    ker = fp8_matmul(x, w, recipe="tile128", use_kernel=True)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+    # non-128-divisible shapes fall back to the dequant path (same math)
+    small = fp8_matmul(x[:100], w, recipe="tile128", use_kernel=True)
+    np.testing.assert_allclose(np.asarray(small),
+                               np.asarray(fp8_matmul(x[:100], w,
+                                                     recipe="tile128")),
+                               rtol=1e-6)
+
+
+def test_tile128_ragged_dims_keep_true_tile_boundaries():
+    """Compact-scale expansion must use the fixed 128 tile size, not
+    ceil(M / num_tiles): with M=224 the tiles are rows [0,128) and
+    [128,224), and a large value at row 120 must be dequantized with its
+    OWN tile's scale — not clipped under the neighboring tile's."""
+    from repro.precision.fp8 import expand_tile_scale, fp8_matmul, \
+        quantize_e4m3
+    x = np.full((224, 128), 0.01, np.float32)
+    x[120, 0] = 100.0                       # large value inside tile 0
+    q, s = quantize_e4m3(jnp.asarray(x), "tile128")
+    assert s.shape == (2, 1)
+    full = np.asarray(expand_tile_scale(s, x.shape))
+    assert np.all(full[:128] == full[0, 0])         # true 128-row boundary
+    assert np.all(full[128:] == full[-1, 0])
+    out = np.asarray(fp8_matmul(jnp.asarray(x), jnp.eye(128),
+                                recipe="tile128"))
+    np.testing.assert_allclose(out[120, 0], 100.0, rtol=0.05)
+    np.testing.assert_allclose(out[200, 0], 0.01, rtol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# recipe-generic supervision: pp and fp8 candidates under the streaming
+# supervisor (mid-run detection + first-bad-step bisection)
+# ---------------------------------------------------------------------------
+
+def _supervise(pcfg, params, model, cfg, steps=4, **scfg_kw):
+    from repro.optim.adamw import AdamW
+    from repro.supervise import Supervisor, SuperviseConfig
+    sup = Supervisor(model, cfg, pcfg, AdamW(lr=1e-3), params=params,
+                     scfg=SuperviseConfig(steps=steps, **scfg_kw),
+                     batch_size=2, seq_len=16)
+    return sup, sup.run()
+
+
+@pytest.fixture(scope="module")
+def gpt4_tied(gpt4):
+    cfg, m, params, batch = gpt4
+    cfg = dataclasses.replace(cfg, tie_embeddings=True)
+    m = Model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def test_supervisor_pp_recipe_clean_and_buggy(gpt4_tied, tmp_path):
+    from repro.parallel.api import ParallelConfig
+    cfg, m, params = gpt4_tied
+    _, res = _supervise(ParallelConfig(pp=2), params, m, cfg,
+                        work_dir=str(tmp_path / "clean"))
+    assert res.passed, res.summary()
+    sup, res = _supervise(
+        ParallelConfig(pp=2, bugs=frozenset(["pp_wrong_stage_division"])),
+        params, m, cfg, work_dir=str(tmp_path / "bug"))
+    assert res.flagged
+    assert res.first_bad_step == 0          # wrong model from the start
+    assert sup.candidate.name == "pp2"
+    assert (res.localized_module or "").startswith("layers.")
+
+
+def test_supervisor_fp8_recipe_clean_and_buggy(gpt4_tied, tmp_path):
+    """FP8 recipes under the supervisor: BF16-epsilon thresholds selected
+    automatically (paper §6.7), clean recipe passes, the stale-scale cast
+    is caught mid-run and bisected."""
+    from repro.parallel.api import ParallelConfig
+    from repro.supervise import CandidateStep
+    cfg, m, params = gpt4_tied
+    sup, res = _supervise(ParallelConfig(fp8="tile128"), params, m, cfg,
+                          work_dir=str(tmp_path / "clean"))
+    assert res.passed, res.summary()
+    assert sup.eps == MACHINE_EPS["bfloat16"]      # == fp8 recipe epsilon
+    assert isinstance(sup.candidate, CandidateStep)
+    sup, res = _supervise(
+        ParallelConfig(fp8="tile128", bugs=frozenset(["fp8_stale_scale"])),
+        params, m, cfg, work_dir=str(tmp_path / "bug"))
+    assert res.flagged
+    assert res.first_bad_step == 0
+    assert (res.localized_module or "").startswith("layers.0.mlp")

@@ -75,6 +75,75 @@ def test_pipeline_step0_uses_exact_single_step_thresholds():
     assert s5[C.KIND_PARAM_POST] == 1.0 * (1 + 0.25 * 5)
 
 
+def test_pipeline_poll_drains_without_is_ready(monkeypatch):
+    """jax versions whose arrays lack ``.is_ready`` used to freeze poll()
+    forever (nothing resolved until drain); the age fallback now resolves
+    entries older than the window in pipeline ticks."""
+    import repro.supervise.pipeline as pmod
+
+    def fake_sq_norms(la, lb):
+        import numpy as np
+        out = np.zeros((len(la), 2), np.float64)
+        for i, (a, b) in enumerate(zip(la, lb)):
+            d = np.asarray(a, np.float64) - np.asarray(b, np.float64)
+            out[i] = [(d * d).sum(), (np.asarray(a, np.float64) ** 2).sum()]
+        return out                       # plain ndarray: no .is_ready
+
+    monkeypatch.setattr(pmod, "sq_norms_async", fake_sq_norms)
+    pipe = AsyncCheckPipeline(Thresholds(eps=2.0 ** -24), window=2)
+    assert pipe.submit(0, _mk_trace(0.0), _mk_trace(0.0)) == []
+    # polls age the entry past the window -> it resolves without drain()
+    done = []
+    for _ in range(4):
+        done += pipe.poll()
+    assert [c.step for c in done] == [0]
+    assert pipe.in_flight == 0
+
+
+def test_pipeline_swap_thresholds_is_epoch_scoped():
+    """Re-estimated thresholds apply to checks at steps >= the swap step;
+    earlier steps (late async resolutions, bisection replays) keep the
+    schedule they trained under, and margins tighten vs the constants."""
+    from repro.core import canonical as C
+    from repro.supervise.pipeline import (REESTIMATED_KIND_MULT,
+                                          SUPERVISED_KIND_MULT)
+    thr0 = Thresholds(eps=2.0 ** -24)
+    pipe = AsyncCheckPipeline(thr0, window=2, drift_alpha=0.0,
+                              kind_mult=REESTIMATED_KIND_MULT)
+    thr1 = Thresholds(eps=2.0 ** -24,
+                      per_tensor={C.KIND_ACT: {"m1/input": 0.5}})
+    pipe.swap_thresholds(thr1, step=4)
+    assert pipe.thresholds_for(3) is thr0
+    assert pipe.thresholds_for(4) is thr1
+    assert pipe.thresholds_for(9) is thr1
+    # per-kind margins under re-estimation never exceed the constants
+    for k, m in SUPERVISED_KIND_MULT.items():
+        assert REESTIMATED_KIND_MULT[k] <= m
+        assert pipe.scales(7)[k] <= m * (1 + pipe.drift_alpha * 7)
+    # the sync replay of an old step sees the old (tighter per-tensor) epoch
+    old = pipe.check_sync(3, _mk_trace(0.0), _mk_trace(0.0))
+    new = pipe.check_sync(5, _mk_trace(0.0), _mk_trace(0.0))
+    r_old = [r for r in old.report.records if r.name == "m1/input"
+             and r.kind == C.KIND_ACT][0]
+    r_new = [r for r in new.report.records if r.name == "m1/input"
+             and r.kind == C.KIND_ACT][0]
+    assert r_new.threshold > r_old.threshold      # thr1's estimate in force
+
+
+def test_thresholds_union_only_widens():
+    from repro.core import canonical as C
+    a = Thresholds(eps=2.0 ** -24,
+                   per_tensor={C.KIND_ACT: {"x": 1e-6, "y": 3e-6}})
+    b = Thresholds(eps=2.0 ** -24,
+                   per_tensor={C.KIND_ACT: {"x": 2e-6},
+                               C.KIND_PARAM_GRAD: {"w": 1e-7}})
+    u = a.union(b)
+    assert u.per_tensor[C.KIND_ACT]["x"] == 2e-6       # max wins
+    assert u.per_tensor[C.KIND_ACT]["y"] == 3e-6       # kept
+    assert u.per_tensor[C.KIND_PARAM_GRAD]["w"] == 1e-7
+    assert a.per_tensor[C.KIND_ACT]["x"] == 1e-6       # inputs untouched
+
+
 # ---------------------------------------------------------------------------
 # trace ring
 # ---------------------------------------------------------------------------
@@ -190,6 +259,34 @@ def test_supervisor_clean_run_passes(tmp_path):
     assert sup.ring.in_memory == [2, 3, 4]
     assert sup.ring.on_disk == [0, 1]                # spilled, memory flat
     assert sup.pipe.max_in_flight <= 2
+
+
+def test_supervisor_periodic_reestimation_clean_run(tmp_path):
+    """Re-estimation every R steps: a clean supervised run passes, fresh
+    epochs land in the pipeline, and the per-kind margins in force are no
+    wider than the constant SUPERVISED_KIND_MULT schedule."""
+    from repro.parallel.api import ParallelConfig
+    from repro.supervise import (SUPERVISED_KIND_MULT, Supervisor,
+                                 SuperviseConfig)
+    cfg, model, params, opt = _small_setup()
+    sup = Supervisor(model, cfg, ParallelConfig(), opt, params=params,
+                     scfg=SuperviseConfig(steps=6, reestimate_every=2,
+                                          work_dir=str(tmp_path)),
+                     batch_size=2, seq_len=16)
+    res = sup.run()
+    assert res.passed, res.summary()
+    assert res.reestimations == 2                    # steps 2 and 4
+    assert len(sup.pipe._epochs) == 3                # step-0 + two swaps
+    for k in range(1, 6):
+        scales = sup.pipe.scales(k)
+        growth = 1 + sup.pipe.drift_alpha * k
+        for kind, mult in SUPERVISED_KIND_MULT.items():
+            assert scales[kind] <= mult * growth + 1e-12, (k, kind)
+    # union-merged epochs only ever widen the per-tensor floors
+    thr0, thr_last = sup.pipe._epochs[0][1], sup.pipe._epochs[-1][1]
+    for kind, named in thr0.per_tensor.items():
+        for name, est in named.items():
+            assert thr_last.per_tensor[kind][name] >= est
 
 
 def test_supervisor_detects_recompute_bug_and_bisects(tmp_path):
