@@ -15,6 +15,9 @@ Writes ``BENCH_supervisor.json`` mapping row name -> microseconds per step:
 * ``supervisor/async2_spill`` — same plus the spill-to-disk trace ring;
 * ``supervisor/pp2_async2``   — the pipeline-parallel candidate (2 stages)
   under the same async supervision;
+* ``supervisor/pp1f1b_async2`` — the REAL multi-device 1F1B engine (2
+  stages on 2 devices, 2 microbatches, per-rank trace merging) under the
+  same async supervision;
 * ``supervisor/fp8_tile128_async2`` — the FP8 tile128 candidate under BF16
   thresholds;
 * ``supervisor/reest_async2`` — dense async loop with periodic threshold
@@ -45,10 +48,14 @@ def run(json_path: str = "BENCH_supervisor.json"):
     emit("supervisor/async2_spill", spill_s * 1e6,
          f"spill ring cost {(spill_s - async_s) * 1e3:+.1f} ms/step")
     pp_s = float(kv["pp_s_per_step"])
+    pp1f1b_s = float(kv["pp1f1b_s_per_step"])
     fp8_s = float(kv["fp8_s_per_step"])
     reest_s = float(kv["reest_s_per_step"])
     emit("supervisor/pp2_async2", pp_s * 1e6,
          "2-stage pipeline candidate under async supervision")
+    emit("supervisor/pp1f1b_async2", pp1f1b_s * 1e6,
+         f"real 2-stage/2-microbatch 1F1B engine, per-rank trace merge "
+         f"({pp1f1b_s / pp_s:.2f}x the staged pp candidate)")
     emit("supervisor/fp8_tile128_async2", fp8_s * 1e6,
          "fp8 tile128 candidate, BF16-eps thresholds")
     emit("supervisor/reest_async2", reest_s * 1e6,

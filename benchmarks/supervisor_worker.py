@@ -97,6 +97,12 @@ def main():
     pp_s = supervised(window=2, spill=False,
                       run_pcfg=ParallelConfig(pp=2))
     print(f"pp_s_per_step\t{pp_s:.6f}")
+    # real multi-device 1F1B engine: 2 stages on 2 devices, 2 microbatches,
+    # per-rank traces merged before every online check
+    pp1f1b_s = supervised(window=2, spill=False,
+                          run_pcfg=ParallelConfig(pp=2, pp_schedule="1f1b",
+                                                  microbatches=2))
+    print(f"pp1f1b_s_per_step\t{pp1f1b_s:.6f}")
     fp8_s = supervised(window=2, spill=False,
                        run_pcfg=ParallelConfig(fp8="tile128"))
     print(f"fp8_s_per_step\t{fp8_s:.6f}")

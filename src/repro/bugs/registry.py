@@ -64,6 +64,21 @@ BUGS: dict[str, BugSpec] = {b.bug_id: b for b in [
             "pipeline stage boundaries computed with a rounded layers-per-"
             "stage; one layer is executed twice, another skipped",
             "wrong model gets trained", "layers.*", ("pp",)),
+    BugSpec("pp_microbatch_order", "W-CP",
+            "Megatron microbatch-schedule bug class (Yu et al.)",
+            "the 1F1B backward recompute reads the NEXT microbatch's "
+            "stashed boundary input, so gradients are accumulated against "
+            "the wrong microbatch's activations; the forward pass — and "
+            "therefore the loss curve — is byte-identical to the correct "
+            "schedule",
+            "wrong gradients only", "layers.*", ("pp", "1f1b")),
+    BugSpec("pp_stale_boundary", "W-CM",
+            "boundary-communication bug class (Yu et al.)",
+            "stage i+1 consumes the previous microbatch's boundary "
+            "activation (stale recv buffer reuse); microbatch 0 is correct "
+            "and every consumed tensor is a real activation, so the loss "
+            "stays plausible and keeps decreasing",
+            "wrong forward + gradients", "layers.*", ("pp", "1f1b")),
     BugSpec("sp_stale_wgrad", "W-CP", "bug 11 (wrong grads w/ overlap)",
             "row-parallel linear_proj weight gradient computed from a stale "
             "(half-zeroed) activation buffer, as if the overlapped backward "

@@ -111,8 +111,22 @@ def collect_section_pairs(ref: Trace, cand: Trace, kinds=DEFAULT_KINDS):
     return entries, leaves_ref, leaves_cand, missing
 
 
+def merge_problems_of(trace) -> list[str]:
+    """The per-rank merge problems a candidate trace carries, if any.
+
+    Multi-rank candidates (the 1F1B pipeline) attach their ``MergeReport``
+    as ``trace.meta['merge_report']``; coverage violations there are
+    check-failing evidence on their own, independent of any value
+    divergence."""
+    meta = getattr(trace, "meta", None) or {}
+    rep = meta.get("merge_report")
+    if rep is None or rep.ok:
+        return []
+    return list(rep.problems())
+
+
 def report_from_errs(entries, errs, thr: Thresholds, missing=(),
-                     thr_scale: float = 1.0) -> Report:
+                     thr_scale: float = 1.0, merge_problems=()) -> Report:
     """Pass 2 of a differential check: fold per-pair relative errors back
     into a ``Report`` (records in section order) and localize.
 
@@ -120,10 +134,12 @@ def report_from_errs(entries, errs, thr: Thresholds, missing=(),
     (note-is-None) entries of ``collect_section_pairs``.  ``thr_scale``
     widens thresholds — a float applies uniformly, a ``{kind: float}``
     mapping per trace kind; the supervisor's per-step drift allowance for
-    multi-step runs, 1.0 for the single-step check.
+    multi-step runs, 1.0 for the single-step check.  ``merge_problems``
+    (per-rank trace merge violations) fail the report unconditionally.
     """
     rep = Report()
     rep.missing.extend(missing)
+    rep.merge_problems.extend(merge_problems)
     it = iter(errs)
     for kind, name, mismatch in entries:
         if mismatch is not None:
@@ -190,7 +206,8 @@ def compare_traces(ref: Trace, cand: Trace, thr: Thresholds,
     entries, la, lb, missing = collect_section_pairs(ref, cand, kinds)
     errs = _to_rel_err(section_sq_norms(la, lb))
     return report_from_errs(entries, errs, thr, missing=missing,
-                            thr_scale=thr_scale)
+                            thr_scale=thr_scale,
+                            merge_problems=merge_problems_of(cand))
 
 
 def localize_with_rewrites(run_ref, run_cand, batch, ref_trace: Trace,
@@ -224,5 +241,13 @@ def localize_with_rewrites(run_ref, run_cand, batch, ref_trace: Trace,
                     if r.flagged and r.name.endswith("/output")]
     if flagged_mods:
         rep.localized = min(flagged_mods)[1]
-        rep.localization_mode = "rewrite"
+    else:
+        # no module diverges in ISOLATION: the bug lives in the glue
+        # between modules (residual stream, stage-boundary communication) —
+        # rewrites sever exactly the module-input paths, so module outputs
+        # all agree while the corrupted stream resurfaces only at
+        # downstream stream taps.  Blaming those would mis-localize;
+        # leave the verdict to the propagation report instead.
+        rep.localized = None
+    rep.localization_mode = "rewrite"
     return rep

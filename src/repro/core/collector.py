@@ -115,6 +115,26 @@ class Section(MutableMapping):
         """Materialize every leaf to numpy (one explicit bulk transfer)."""
         return {name: self[name] for name in self._data}
 
+    # ---- per-microbatch sections -------------------------------------------
+    @classmethod
+    def concat(cls, sections, axis: int = 0) -> "Section":
+        """Concatenate same-named sections along ``axis`` — the microbatch
+        axis of per-rank pipeline traces — without any host transfer
+        (leaves stay device-resident; the merger's per-rank path builds
+        the reference-shaped sections this way)."""
+        secs = [s if isinstance(s, Section) else cls(s) for s in sections]
+        if not secs:
+            return cls()
+        names = list(secs[0])
+        for s in secs[1:]:
+            if list(s) != names:
+                raise ValueError(
+                    "per-microbatch sections disagree on tensor names")
+        out = cls()
+        for n in names:
+            out[n] = jnp.concatenate([s.raw(n) for s in secs], axis=axis)
+        return out
+
 
 _SECTION_FIELDS = ("activations", "act_grads", "param_grads", "main_grads",
                    "params_post")
@@ -323,50 +343,93 @@ def trace_pair_step(model, params, batch2, opt=None, opt_state=None,
                          tap_filter=tap_filter, jit=jit)
 
 
+def make_pair_collector(loss_call, opt, params, batch, *,
+                        collect_act_grads=True, tap_filter=None, jit=True,
+                        row_rewrite=None):
+    """Build-once vmapped BASE+PERTURBED pair collection — the single
+    source of the stacked two-row reference run.
+
+    ``trace_fn_pair`` calls it once per invocation; the supervised loop's
+    ``thresholds.make_pair_estimator`` builds it once and reuses the same
+    compiled callable across re-estimation epochs.  ``batch`` is an
+    UNSTACKED shape template.  ``row_rewrite(flag, step)`` optionally
+    builds a per-row callable-rewrite dict traced into the vmapped step
+    (the token-input embedding perturbation: flag 0 on the base row, 1 on
+    the perturbed row).
+
+    Returns ``collect(params, opt_state, batch2, step=0) -> (Trace,
+    Trace)`` with ``collect.shapes`` / ``collect.fwd_order`` exposing the
+    tap discovery; loss/grad_norm stay device scalars (callers that need
+    host floats convert).
+    """
+    batch_t = {k: jnp.asarray(v) for k, v in batch.items()}
+    shapes, fwd_order = tap_shapes(loss_call, params, batch_t, None)
+    probes = _make_probes(shapes, tap_filter, collect_act_grads)
+
+    def one(p, b, flag, step_k, pr):
+        def loss_fn(pp, prr):
+            rew = row_rewrite(flag, step_k) if row_rewrite is not None else {}
+            ctx = TraceContext("rewrite" if rew else "collect", probes=prr,
+                               rewrites=rew)
+            loss = loss_call(pp, b, ctx)
+            return loss, ctx.fwd
+        (loss, fwd), (pg, ag) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(p, pr)
+        return loss, fwd, pg, ag
+
+    def _pair(p, st, b2, flags, step_k, pr):
+        loss, fwd, pg, ag = jax.vmap(
+            one, in_axes=(None, 0, 0, None, None))(p, b2, flags, step_k, pr)
+        if opt is None:
+            return loss, fwd, pg, ag, None, None, None
+        new_p, _, info = jax.vmap(
+            opt.update, in_axes=(None, 0, None))(p, pg, st)
+        return loss, fwd, pg, ag, info.main_grads, new_p, info.grad_norm
+
+    pair_c = jax.jit(_pair) if jit else _pair
+    flags = jnp.asarray([0.0, 1.0], jnp.float32)
+
+    def collect(p, st, batch2, step: int = 0) -> tuple[Trace, Trace]:
+        b2 = {k: jnp.asarray(v) for k, v in batch2.items()}
+        loss, fwd, pg, ag, mg, new_p, gn = pair_c(p, st, b2, flags,
+                                                  jnp.int32(step), probes)
+        pg_named = flatten_named(pg)
+        mg_named = None if mg is None else flatten_named(mg)
+        np_named = None if new_p is None else flatten_named(new_p)
+        traces = []
+        for i in (0, 1):
+            tr = Trace()
+            tr.loss = loss[i]
+            tr.activations = {k: fwd[k][i] for k in fwd_order}
+            tr.act_grads = {k: ag[k][i] for k in fwd_order if k in ag}
+            tr.param_grads = {k: v[i] for k, v in pg_named.items()}
+            tr.meta["fwd_order"] = list(fwd_order)
+            if mg_named is not None:
+                tr.main_grads = {k: v[i] for k, v in mg_named.items()}
+                tr.params_post = {k: v[i] for k, v in np_named.items()}
+                tr.grad_norm = gn[i]
+            traces.append(tr)
+        return traces[0], traces[1]
+
+    collect.shapes = shapes
+    collect.fwd_order = fwd_order
+    return collect
+
+
 def trace_fn_pair(loss_call, params, batch2, opt=None, opt_state=None,
                   collect_act_grads=True, tap_filter=None, jit=True
                   ) -> tuple[Trace, Trace]:
     batch2_j = {k: jnp.asarray(v) for k, v in batch2.items()}
     batch0 = {k: v[0] for k, v in batch2_j.items()}
-    shapes, fwd_order = tap_shapes(loss_call, params, batch0, None)
-    probes = _make_probes(shapes, tap_filter, collect_act_grads)
-
-    def loss_fn(p, b, probes):
-        ctx = TraceContext("collect", probes=probes, rewrites={})
-        loss = loss_call(p, b, ctx)
-        return loss, ctx.fwd
-
-    def step(p, b, probes):
-        (loss, fwd), (pgrads, agrads) = jax.value_and_grad(
-            loss_fn, argnums=(0, 2), has_aux=True)(p, b, probes)
-        return loss, fwd, pgrads, agrads
-
-    pair = jax.vmap(step, in_axes=(None, 0, None))
-    pair_c = jax.jit(pair) if jit else pair
-    loss, fwd, pgrads, agrads = pair_c(params, batch2_j, probes)
-
-    opt_out = None
+    collect = make_pair_collector(loss_call, opt, params, batch0,
+                                  collect_act_grads=collect_act_grads,
+                                  tap_filter=tap_filter, jit=jit)
+    st = None
     if opt is not None:
         st = opt_state if opt_state is not None else opt.init(params)
-        upd = jax.vmap(opt.update, in_axes=(None, 0, None))
-        upd = jax.jit(upd) if jit else upd
-        opt_out = upd(params, pgrads, st)
-
-    traces = []
-    for i in (0, 1):
-        tr = Trace()
-        tr.loss = float(loss[i])
-        tr.activations = {k: fwd[k][i] for k in fwd_order}
-        tr.act_grads = {k: agrads[k][i] for k in fwd_order if k in agrads}
-        tr.param_grads = {k: v[i]
-                          for k, v in flatten_named(pgrads).items()}
-        tr.meta["fwd_order"] = list(fwd_order)
-        if opt_out is not None:
-            new_params, _, info = opt_out
-            tr.main_grads = {k: v[i] for k, v in
-                             flatten_named(info.main_grads).items()}
-            tr.params_post = {k: v[i] for k, v in
-                              flatten_named(new_params).items()}
-            tr.grad_norm = float(info.grad_norm[i])
-        traces.append(tr)
-    return traces[0], traces[1]
+    t0, t1 = collect(params, st, batch2_j)
+    for tr in (t0, t1):      # one-shot API contract: host floats
+        tr.loss = float(tr.loss)
+        if opt is not None:
+            tr.grad_norm = float(tr.grad_norm)
+    return t0, t1

@@ -116,8 +116,10 @@ def ttrace_supervise(model, cfg, pcfg, opt, params=None, steps: int = 8,
     checking, and on a flag bisect to the first bad step and localize.
 
     Recipe-generic: ``pcfg`` selects the shard_map (dense/MoE/ZeRO-1),
-    pipeline-parallel (``pp=N``) or FP8 (``fp8="tile128"`` etc., checked
-    under BF16 epsilon automatically) candidate.
+    staged pipeline (``pp=N``), real multi-device 1F1B pipeline
+    (``pp=N, pp_schedule="1f1b", microbatches=M`` — per-rank traces merged
+    before checking) or FP8 (``fp8="tile128"`` etc., checked under BF16
+    epsilon automatically) candidate.
 
     Thin facade over ``repro.supervise.Supervisor`` — ``kwargs`` map onto
     ``SuperviseConfig`` fields (``check_every``, ``async_window``,

@@ -12,10 +12,18 @@ Given rank-local shards plus the annotation-derived shard mapping, the merger
 ``merge_jax_array`` additionally cross-checks a ``jax.Array``'s actual device
 layout against the user's annotation, catching "the framework sharded this
 differently than you told me" bugs before any value comparison happens.
+
+``merge_microbatch_traces`` is the **per-rank trace path** (paper Fig 5):
+given the stage-local, per-microbatch traces a real pipeline schedule emits,
+it concatenates the microbatch axis, canonicalizes stage-local layer names
+via the per-stage ``stage_layer_table`` renaming, accumulates per-microbatch
+parameter-gradient contributions, and verifies (stage, microbatch) coverage —
+no microbatch contributed twice, none missing — before any value comparison.
 """
 from __future__ import annotations
 
 import itertools
+import re
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -34,6 +42,7 @@ class MergeReport:
     overlap: int = 0
     omission: int = 0
     layout_mismatches: list = field(default_factory=list)
+    rank_problems: list = field(default_factory=list)  # per-rank trace merge
 
     def problems(self) -> list[str]:
         out = []
@@ -47,6 +56,7 @@ class MergeReport:
         for m in self.layout_mismatches:
             out.append(f"layout mismatch at coords {m['coords']}: annotation "
                        f"says {m['expected']}, array is {m['actual']}")
+        out.extend(self.rank_problems)
         return out
 
 
@@ -146,3 +156,147 @@ def merge_jax_array(arr, spec: ShardSpec, mesh_axes: dict[str, str],
     rep2.layout_mismatches.extend(report.layout_mismatches)
     rep2.ok = rep2.ok and report.ok
     return full, rep2
+
+
+# ---------------------------------------------------------------------------
+# Per-rank trace merging (real pipeline schedules, paper Fig 5)
+# ---------------------------------------------------------------------------
+
+_LAYER_RE = re.compile(r"^layers\.(\d+)(.*)$")
+
+
+def canonical_stage_name(name: str, table: list[tuple[int, int]]) -> str:
+    """Stage-LOCAL tap/param name -> canonical (global) name via the stage's
+    ``(executed, canonical)`` table — the renaming a rank-local trace needs
+    before it can align with the single-device reference (paper Fig 5).
+    Non-layer names (embedding, final norm, LM head) pass through."""
+    m = _LAYER_RE.match(name)
+    if not m:
+        return name
+    local = int(m.group(1))
+    if local >= len(table):
+        raise KeyError(f"local layer {local} outside a stage table of "
+                       f"{len(table)} entries")
+    return f"layers.{table[local][1]}{m.group(2)}"
+
+
+def merge_microbatch_traces(records, tables, n_microbatches: int,
+                            place=None):
+    """Merge per-(stage, microbatch) rank-local traces into ONE
+    reference-shaped trace.
+
+    ``records``: iterable of ``(stage, microbatch, Trace)`` — forward ops
+    contribute ``activations`` (plus per-stage ``meta['fwd_order']``),
+    backward ops contribute ``act_grads`` and per-microbatch
+    ``param_grads`` contributions.  ``tables``: per-stage
+    ``(executed, canonical)`` renaming (``parallel.pp1f1b.stage_tables``).
+    ``place``: optional device/sharding the merged leaves are gathered to
+    (the controller the checker runs on); without it, leaves must already
+    be colocated per stage.
+
+    The merge verifies per-rank coverage before any value comparison can
+    happen: every (stage, name) must be contributed by every microbatch
+    exactly once (overlap/omission otherwise), canonicalized names must
+    stay unique across stages within a kind — replicated non-layer params
+    (tied embeddings on both pipeline ends) instead SUM, the explicit
+    tied-embedding reduction — and activations/activation gradients are
+    concatenated along the microbatch (batch) axis in microbatch order
+    while parameter gradients accumulate across microbatches.
+
+    Returns ``(merged_trace, MergeReport)``; the report also rides along as
+    ``merged.meta['merge_report']`` so downstream checkers surface its
+    problems with the step report.
+    """
+    import jax
+
+    from repro.core import canonical as C
+    from repro.core.collector import Section, Trace
+
+    S, M = len(tables), n_microbatches
+    report = MergeReport()
+
+    def problem(msg):
+        report.rank_problems.append(msg)
+        report.ok = False
+
+    per: dict = {C.KIND_ACT: {}, C.KIND_ACT_GRAD: {},
+                 C.KIND_PARAM_GRAD: {}}
+    fwd_orders: dict = {}
+    for stage, mb, tr in records:
+        if not (0 <= stage < S and 0 <= mb < M):
+            problem(f"record (stage {stage}, mb {mb}) outside the "
+                    f"{S}x{M} schedule grid")
+            continue
+        if len(tr.activations) and stage not in fwd_orders:
+            fwd_orders[stage] = list(tr.meta.get("fwd_order")
+                                     or tr.activations)
+        for kind, acc in per.items():
+            sec = tr.section(kind)
+            for name in sec:
+                by_mb = acc.setdefault((stage, name), {})
+                if mb in by_mb:
+                    report.overlap += 1
+                    problem(f"{kind} {name}: (stage {stage}, mb {mb}) "
+                            f"contributed twice")
+                    continue
+                by_mb[mb] = sec.raw(name)
+
+    def gather(x):
+        return jax.device_put(x, place) if place is not None else x
+
+    def full_coverage(kind, stage, name, by_mb) -> bool:
+        missing = [m for m in range(M) if m not in by_mb]
+        if missing:
+            report.omission += len(missing)
+            problem(f"{kind} {name}: stage {stage} missing "
+                    f"microbatch(es) {missing}")
+            return False
+        return True
+
+    merged = Trace()
+    # activations / activation grads: concat along the microbatch axis
+    for kind in (C.KIND_ACT, C.KIND_ACT_GRAD):
+        out = merged.section(kind)
+        for stage in sorted({s for s, _ in per[kind]}):
+            valid = {name: by_mb
+                     for (s, name), by_mb in per[kind].items()
+                     if s == stage
+                     and full_coverage(kind, stage, name, by_mb)}
+            if not valid:
+                continue
+            cat = Section.concat(
+                [Section({n: gather(valid[n][m]) for n in valid})
+                 for m in range(M)], axis=0)
+            for name in cat:
+                canon = canonical_stage_name(name, tables[stage])
+                if canon in out:
+                    problem(f"{kind} {canon}: produced by more than one "
+                            f"stage after canonical renaming")
+                    continue
+                out[canon] = cat.raw(name)
+    # parameter grads: accumulate the per-microbatch contributions
+    pg = merged.param_grads
+    for (stage, name) in sorted(per[C.KIND_PARAM_GRAD],
+                                key=lambda sn: sn[0]):
+        by_mb = per[C.KIND_PARAM_GRAD][(stage, name)]
+        if not full_coverage(C.KIND_PARAM_GRAD, stage, name, by_mb):
+            continue
+        total = gather(by_mb[0])
+        for m in range(1, M):
+            total = total + gather(by_mb[m])
+        canon = canonical_stage_name(name, tables[stage])
+        if canon in pg:
+            if name.startswith("layers."):
+                problem(f"param_grad {canon}: produced by more than one "
+                        f"stage after canonical renaming")
+                continue
+            pg[canon] = pg.raw(canon) + total   # tied-embedding reduction
+        else:
+            pg[canon] = total
+    order = []
+    for stage in sorted(fwd_orders):
+        order.extend(canonical_stage_name(n, tables[stage])
+                     for n in fwd_orders[stage])
+    merged.meta["fwd_order"] = order
+    merged.meta["merge_report"] = report
+    return merged, report

@@ -164,69 +164,47 @@ def make_pair_estimator(loss_call, opt, params, batch, eps: float,
     """Build ``estimate(params, opt_state, batch) -> Thresholds`` compiled
     exactly once — the supervised loop's periodic threshold RE-estimation.
 
-    One vmapped jitted call collects the base and eps-perturbed traces of
-    the CURRENT reference state on the live batch (the fused pair path of
-    ``estimate_thresholds``, but stateful and cached).  Float model inputs
-    are perturbed per-row in the stacked batch; token-only models fold the
-    embedding-output perturbation INTO the stacked run via a per-row
-    callable rewrite ``x + flag * eps * ||x|| * d/||d||`` (flag 0 on the
-    base row) — the fused path the serial estimator cannot take because the
-    one-shot rewrite needs the base trace first.
+    The pair collection itself is ``collector.make_pair_collector`` — the
+    same build-once vmapped base+perturbed run ``trace_fn_pair`` (and with
+    it the one-shot fused estimation path) uses, so the two paths cannot
+    drift.  Float model inputs are perturbed per-row in the stacked batch;
+    token-only models fold the embedding-output perturbation INTO the
+    stacked run via a per-row callable rewrite
+    ``x + flag * eps * ||x|| * d/||d||`` (flag 0 on the base row) — the
+    fused path the serial estimator cannot take because the one-shot
+    rewrite needs the base trace first.
     """
     import jax
     import jax.numpy as jnp
 
-    from repro.core.collector import (_make_probes, flatten_named,
-                                      tap_shapes)
-    from repro.core.tap import TraceContext
+    from repro.core.collector import make_pair_collector
 
     batch_t = {k: jnp.asarray(v) for k, v in batch.items()}
     float_keys = _float_keys(batch_t)
-    shapes, fwd_order = tap_shapes(loss_call, params, batch_t, None)
     token_mode = not float_keys
-    if token_mode and _EMB_TAP not in shapes:
-        raise ValueError("no float inputs and no embedding/output tap — "
-                         "cannot build a fused pair estimator")
-    probes = _make_probes(shapes, None, True)
     base_key = jax.random.PRNGKey(seed ^ 0x5EED)
 
-    def one(p, b, flag, step_k, pr):
-        def loss_fn(pp, prr):
-            rew = {}
-            if token_mode:
-                def perturb_tap(x):
-                    # directional eps-noise gated by the row flag; matches
-                    # generator.perturb semantics (||dX|| = eps * ||X||).
-                    # The direction varies per re-estimation (step folded
-                    # into the key, like the float path's per-step seed) so
-                    # the union explores new directions each epoch.
-                    d = jax.random.normal(jax.random.fold_in(base_key,
-                                                             step_k),
-                                          x.shape, jnp.float32)
-                    nx = jnp.sqrt(jnp.sum(jnp.square(
-                        x.astype(jnp.float32))))
-                    nd = jnp.maximum(jnp.sqrt(jnp.sum(jnp.square(d))),
-                                     1e-30)
-                    return (x.astype(jnp.float32)
-                            + flag * (eps * nx / nd) * d)
-                rew = {_EMB_TAP: perturb_tap}
-            ctx = TraceContext("rewrite" if rew else "collect", probes=prr,
-                              rewrites=rew)
-            loss = loss_call(pp, b, ctx)
-            return loss, ctx.fwd
-        (loss, fwd), (pg, ag) = jax.value_and_grad(
-            loss_fn, argnums=(0, 1), has_aux=True)(p, pr)
-        return loss, fwd, pg, ag
+    row_rewrite = None
+    if token_mode:
+        def row_rewrite(flag, step_k):
+            def perturb_tap(x):
+                # directional eps-noise gated by the row flag; matches
+                # generator.perturb semantics (||dX|| = eps * ||X||).
+                # The direction varies per re-estimation (step folded
+                # into the key, like the float path's per-step seed) so
+                # the union explores new directions each epoch.
+                d = jax.random.normal(jax.random.fold_in(base_key, step_k),
+                                      x.shape, jnp.float32)
+                nx = jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+                nd = jnp.maximum(jnp.sqrt(jnp.sum(jnp.square(d))), 1e-30)
+                return x.astype(jnp.float32) + flag * (eps * nx / nd) * d
+            return {_EMB_TAP: perturb_tap}
 
-    def _pair(p, st, b2, flags, step_k, pr):
-        loss, fwd, pg, ag = jax.vmap(
-            one, in_axes=(None, 0, 0, None, None))(p, b2, flags, step_k, pr)
-        new_p, _, info = jax.vmap(
-            opt.update, in_axes=(None, 0, None))(p, pg, st)
-        return loss, fwd, pg, ag, info.main_grads, new_p
-
-    pair_c = jax.jit(_pair)
-    flags = jnp.asarray([0.0, 1.0], jnp.float32)
+    collect = make_pair_collector(loss_call, opt, params, batch_t,
+                                  row_rewrite=row_rewrite)
+    if token_mode and _EMB_TAP not in collect.shapes:
+        raise ValueError("no float inputs and no embedding/output tap — "
+                         "cannot build a fused pair estimator")
 
     def estimate(p, st, live_batch, step: int = 0) -> Thresholds:
         if token_mode:
@@ -239,20 +217,8 @@ def make_pair_estimator(loss_call, opt, params, batch, eps: float,
                 pert = (perturb(base, eps, seed=seed + step * 131 + i)
                         if k in float_keys else base)
                 b2[k] = jnp.stack([jnp.asarray(base), jnp.asarray(pert)])
-        loss, fwd, pg, ag, mg, new_p = pair_c(p, st, b2, flags,
-                                              jnp.int32(step), probes)
-        pg_named, mg_named = flatten_named(pg), flatten_named(mg)
-        np_named = flatten_named(new_p)
-        traces = []
-        for i in (0, 1):
-            tr = Trace()
-            tr.activations = {k: fwd[k][i] for k in fwd_order}
-            tr.act_grads = {k: ag[k][i] for k in fwd_order if k in ag}
-            tr.param_grads = {k: v[i] for k, v in pg_named.items()}
-            tr.main_grads = {k: v[i] for k, v in mg_named.items()}
-            tr.params_post = {k: v[i] for k, v in np_named.items()}
-            traces.append(tr)
+        t0, t1 = collect(p, st, b2, step=step)
         return Thresholds(eps=eps, margin=margin,
-                          per_tensor=_diff_sections(traces[0], traces[1]))
+                          per_tensor=_diff_sections(t0, t1))
 
     return estimate

@@ -9,6 +9,12 @@
     PYTHONPATH=src python -m repro.launch.supervise --recipe fp8-tile128 \
         --reduced --steps 8 --bug fp8_stale_scale
 
+    # REAL multi-device 1F1B pipeline: per-stage submeshes, microbatched
+    # schedule, per-rank traces merged before checking
+    PYTHONPATH=src python -m repro.launch.supervise --recipe pp-1f1b \
+        --pp 4 --microbatches 4 --reduced --layers 8 --steps 8 \
+        --bug pp_stale_boundary
+
 Runs the single-device reference and the candidate recipe (shard_map
 dense/MoE/ZeRO-1, staged pipeline, or FP8 — with any injected registry
 bugs) in lockstep, checking every step online through the async pipeline;
@@ -30,8 +36,13 @@ import dataclasses
 import fnmatch
 import sys
 
-RECIPES = ("dense", "moe", "zero1", "pp",
+RECIPES = ("dense", "moe", "zero1", "pp", "pp-1f1b",
            "fp8-global", "fp8-per_tensor", "fp8-tile128")
+
+# each non-shard_map recipe's OWN injectable feature set: a bug that doesn't
+# intersect it would be a silent no-op under that recipe
+_RECIPE_FEATURES = {"pp": {"pp"}, "pp-1f1b": {"pp", "1f1b"},
+                    "fp8": {"fp8"}}
 
 
 def build_pcfg(args, requires: set, arch_is_moe: bool = False):
@@ -39,31 +50,38 @@ def build_pcfg(args, requires: set, arch_is_moe: bool = False):
     bugs = frozenset([args.bug]) if args.bug else frozenset()
     recipe = args.recipe or "dense"
     # a bug whose requirements name a recipe pulls that recipe in (so
-    # --bug pp_wrong_stage_division alone drives the pp candidate) — but an
-    # EXPLICIT conflicting --recipe is refused, never silently replaced
-    for feat, forced in (("pp", "pp"), ("fp8", "fp8-global")):
-        if feat in requires and not recipe.startswith(feat):
+    # --bug pp_wrong_stage_division alone drives the pp candidate and
+    # --bug pp_stale_boundary the 1F1B engine) — but an EXPLICIT
+    # conflicting --recipe is refused, never silently replaced
+    for feat, forced, fits in (
+            ("1f1b", "pp-1f1b", lambda r: r == "pp-1f1b"),
+            ("pp", "pp", lambda r: r.startswith("pp")),
+            ("fp8", "fp8-global", lambda r: r.startswith("fp8"))):
+        if feat in requires and not fits(recipe):
             if args.recipe is not None:
                 raise SystemExit(
-                    f"bug {args.bug!r} requires the {feat} recipe but "
+                    f"bug {args.bug!r} requires the {forced} recipe but "
                     f"--recipe {args.recipe} was given")
             recipe = forced
-    if recipe == "pp" or recipe.startswith("fp8"):
-        # single-controller recipes: refuse explicit shard_map flags
-        # instead of silently dropping them
+    if recipe.startswith(("pp", "fp8")):
+        # pp/fp8 recipes: refuse explicit shard_map flags instead of
+        # silently dropping them
         ignored = [f for f, on in (("--dp", args.dp is not None),
                                    ("--cp", args.cp is not None),
                                    ("--tp", args.tp is not None),
                                    ("--sp", args.sp),
                                    ("--zero1", args.zero1)) if on]
         if ignored:
-            raise SystemExit(f"recipe {recipe!r} is single-controller — "
-                             f"{' '.join(ignored)} cannot apply")
+            raise SystemExit(f"recipe {recipe!r} cannot combine with "
+                             f"shard_map flags — {' '.join(ignored)} "
+                             f"cannot apply")
         # ... and only express bugs that require their own feature (the pp
-        # candidate consults bugs for the stage division, fp8 for the cast;
-        # a shard_map-side bug would be a silent no-op here)
-        feat = "pp" if recipe == "pp" else "fp8"
-        if args.bug and feat not in requires:
+        # candidates consult bugs for the stage division and the 1F1B
+        # schedule, fp8 for the cast; a shard_map-side bug would be a
+        # silent no-op here)
+        own = _RECIPE_FEATURES["fp8" if recipe.startswith("fp8")
+                               else recipe]
+        if args.bug and not (requires & own):
             raise SystemExit(
                 f"bug {args.bug!r} is not implemented by the {recipe!r} "
                 f"candidate — it injects into the shard_map path")
@@ -71,6 +89,18 @@ def build_pcfg(args, requires: set, arch_is_moe: bool = False):
         if args.pp < 2:
             raise SystemExit("--recipe pp needs --pp >= 2 stages")
         pcfg = ParallelConfig(pp=args.pp, bugs=bugs)
+    elif recipe == "pp-1f1b":
+        if args.pp < 2:
+            raise SystemExit("--recipe pp-1f1b needs --pp >= 2 stages")
+        if args.microbatches < 2:
+            raise SystemExit("--recipe pp-1f1b needs --microbatches >= 2 "
+                             "(one microbatch degenerates to the staged "
+                             "schedule)")
+        if args.batch % args.microbatches:
+            raise SystemExit(f"--batch {args.batch} is not divisible into "
+                             f"--microbatches {args.microbatches}")
+        pcfg = ParallelConfig(pp=args.pp, pp_schedule="1f1b",
+                              microbatches=args.microbatches, bugs=bugs)
     elif recipe.startswith("fp8"):
         pcfg = ParallelConfig(fp8=recipe.split("-", 1)[1], bugs=bugs)
     else:
@@ -103,10 +133,14 @@ def main(argv=None):
                          "mixtral-8x7b for --recipe moe)")
     ap.add_argument("--recipe", default=None, choices=RECIPES,
                     help="candidate recipe: shard_map dense/moe/zero1, "
-                         "staged pipeline, or an fp8 scaling recipe "
-                         "(default dense; a --bug requiring pp/fp8 pulls "
-                         "that recipe in)")
+                         "staged pipeline, real multi-device 1F1B pipeline "
+                         "(pp-1f1b), or an fp8 scaling recipe (default "
+                         "dense; a --bug requiring pp/1f1b/fp8 pulls that "
+                         "recipe in)")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--layers", type=int, default=None,
+                    help="override the arch's layer count (deeper reduced "
+                         "models for multi-stage pipelines)")
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=32)
@@ -122,7 +156,10 @@ def main(argv=None):
     ap.add_argument("--tp", type=int, default=None,
                     help="tensor-parallel size (default 2)")
     ap.add_argument("--pp", type=int, default=2,
-                    help="pipeline stages for --recipe pp")
+                    help="pipeline stages for --recipe pp / pp-1f1b")
+    ap.add_argument("--microbatches", type=int, default=4,
+                    help="1F1B microbatches per step (--recipe pp-1f1b; "
+                         "--batch must divide into them)")
     ap.add_argument("--sp", action="store_true")
     ap.add_argument("--zero1", action="store_true")
     ap.add_argument("--check-every", type=int, default=1)
@@ -158,6 +195,8 @@ def main(argv=None):
                          f"[{cfg.arch_type}]")
     if args.reduced:
         cfg = cfg.reduced()
+    if args.layers is not None:
+        cfg = dataclasses.replace(cfg, n_layers=args.layers)
     # the candidate recipes implement the GPT/Llama/MoE families
     cfg = dataclasses.replace(cfg, tie_embeddings=True)
     recipe, pcfg = build_pcfg(args, set(spec.requires) if spec else set(),
@@ -177,8 +216,9 @@ def main(argv=None):
 
     print(f"supervising {cfg.name} ({'reduced' if args.reduced else 'full'}) "
           f"over {args.steps} steps: recipe={recipe} dp={pcfg.dp} "
-          f"cp={pcfg.cp} tp={pcfg.tp} pp={pcfg.pp} sp={pcfg.sp} "
-          f"zero1={pcfg.zero1} fp8={pcfg.fp8} "
+          f"cp={pcfg.cp} tp={pcfg.tp} pp={pcfg.pp} "
+          f"({pcfg.pp_schedule}, microbatches={pcfg.microbatches}) "
+          f"sp={pcfg.sp} zero1={pcfg.zero1} fp8={pcfg.fp8} "
           f"async_window={args.async_window} check_every={args.check_every} "
           f"reestimate_every={args.reestimate_every}")
     if spec:

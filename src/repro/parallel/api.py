@@ -61,15 +61,21 @@ class ParallelConfig:
     tp: int = 1
     sp: bool = False
     zero1: bool = False
-    pp: int = 1                  # staged pipeline candidate (parallel.pp)
+    pp: int = 1                  # pipeline candidate (parallel.pp / pp1f1b)
+    pp_schedule: str = "staged"  # staged (single-controller) | 1f1b
+    microbatches: int = 1        # 1F1B microbatch count
     fp8: Optional[str] = None    # FP8 recipe: global | per_tensor | tile128
     bugs: frozenset = frozenset()
 
     @property
     def n_devices(self):
-        # pp and fp8 are single-controller candidate recipes — they model
-        # semantics (stage division, quantization), not device placement
-        return self.dp * self.cp * self.tp
+        # staged pp and fp8 are single-controller candidate recipes — they
+        # model semantics (stage division, quantization), not placement;
+        # the 1F1B engine places one pipeline stage per device
+        base = self.dp * self.cp * self.tp
+        if self.pp > 1 and self.pp_schedule == "1f1b":
+            return base * self.pp
+        return base
 
     @property
     def features(self) -> set:
@@ -80,6 +86,7 @@ class ParallelConfig:
         if self.sp: f.add("sp")
         if self.zero1: f.add("zero1")
         if self.pp > 1: f.add("pp")
+        if self.pp > 1 and self.pp_schedule == "1f1b": f.add("1f1b")
         if self.fp8: f.add("fp8")
         return f
 
@@ -88,15 +95,19 @@ class ParallelConfig:
         """Which candidate implementation drives this config."""
         if self.fp8 and self.pp > 1:
             raise ValueError("pp + fp8 in one candidate is not supported")
+        if self.pp_schedule not in ("staged", "1f1b"):
+            raise ValueError(f"unknown pp_schedule {self.pp_schedule!r}")
         if self.fp8:
             return "fp8"
         if self.pp > 1:
-            return "pp"
+            return "pp_1f1b" if self.pp_schedule == "1f1b" else "pp"
         return "shard_map"
 
 
 def make_device_mesh(pcfg: ParallelConfig) -> Mesh:
-    n = pcfg.n_devices
+    # the shard_map mesh covers the dp/cp/tp axes only — the 1F1B engine's
+    # per-stage devices (the pp factor of n_devices) never join this mesh
+    n = pcfg.dp * pcfg.cp * pcfg.tp
     devs = jax.devices()
     if len(devs) < n:
         raise RuntimeError(
@@ -274,12 +285,17 @@ def clear_step_cache():
 def _check_recipe_pcfg(cfg: ArchConfig, pcfg: ParallelConfig) -> None:
     if pcfg.dp * pcfg.cp * pcfg.tp != 1 or pcfg.zero1 or pcfg.sp:
         raise ValueError(
-            f"the {pcfg.recipe_kind} candidate is a single-controller "
-            f"recipe — combine it with dp/cp/tp/zero1 is not supported "
-            f"(got {pcfg})")
+            f"the {pcfg.recipe_kind} candidate cannot combine with "
+            f"dp/cp/tp/zero1 (got {pcfg})")
+    if pcfg.microbatches > 1 and pcfg.recipe_kind != "pp_1f1b":
+        # only the 1F1B engine executes microbatches; anywhere else the
+        # flag would be a silent no-op
+        raise ValueError(
+            f"microbatches={pcfg.microbatches} applies to the 1F1B "
+            f"pipeline only (recipe {pcfg.recipe_kind})")
     if cfg.arch_type != "dense":
         # fp8 quantizes the dense MLP matmuls only (MoE expert matmuls are
-        # a ROADMAP follow-up) and the pp loss partitions homogeneous
+        # a ROADMAP follow-up) and the pp losses partition homogeneous
         # attn_mlp stacks; running other arches would be a silent no-op —
         # the injected bug never expresses and a clean PASS means nothing
         raise ValueError(
@@ -296,6 +312,11 @@ def _recipe_runner(cfg: ArchConfig, pcfg: ParallelConfig, ref_params,
         from repro.parallel.pp import make_pp_runner
         return make_pp_runner(model, ref_params, pcfg.pp, opt=opt,
                               opt_state=opt_state, bugs=pcfg.bugs)
+    if pcfg.recipe_kind == "pp_1f1b":
+        from repro.parallel.pp1f1b import make_pp1f1b_runner
+        return make_pp1f1b_runner(model, ref_params, pcfg.pp,
+                                  pcfg.microbatches, opt=opt,
+                                  opt_state=opt_state, bugs=pcfg.bugs)
     from repro.precision.fp8 import make_fp8_runner
     return make_fp8_runner(model, ref_params, pcfg.fp8, opt=opt,
                            opt_state=opt_state, bugs=pcfg.bugs)
@@ -310,6 +331,11 @@ def _recipe_train_step(cfg: ArchConfig, pcfg: ParallelConfig, ref_params,
         from repro.parallel.pp import make_pp_train_step
         return make_pp_train_step(model, ref_params, opt, batch, pcfg.pp,
                                   bugs=pcfg.bugs)
+    if pcfg.recipe_kind == "pp_1f1b":
+        from repro.parallel.pp1f1b import make_pp1f1b_train_step
+        return make_pp1f1b_train_step(model, ref_params, opt, batch,
+                                      pcfg.pp, pcfg.microbatches,
+                                      bugs=pcfg.bugs)
     from repro.precision.fp8 import make_fp8_train_step
     return make_fp8_train_step(model, ref_params, opt, batch, pcfg.fp8,
                                bugs=pcfg.bugs)

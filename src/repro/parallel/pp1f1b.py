@@ -1,0 +1,476 @@
+"""Real multi-device 1F1B pipeline parallelism with per-rank trace merging.
+
+Unlike ``parallel.pp`` — a single-controller *staged* candidate that bakes
+the canonical stage-local -> global renaming into one jitted loss — this
+engine runs the pipeline the way a PP framework does (paper §5, Fig 5):
+
+* the model is partitioned onto **per-stage single-device submeshes** built
+  from the process's (forced-host) device list: stage ``s`` holds only its
+  own layer slice, plus the embedding on stage 0 and the final norm /
+  LM head on the last stage.  Tied embeddings are replicated on both ends
+  and their gradients explicitly reduced across the two stages
+  (Megatron-style tied-embedding all-reduce);
+* execution follows the **1F1B microbatch schedule** (``schedule_1f1b``):
+  per-stage warmup forwards, steady one-forward-one-backward, cooldown
+  backwards — with explicit stage-boundary activation/gradient
+  ``device_put`` transfers and a bounded per-stage activation stash (the
+  1F1B memory property: stage ``s`` stashes at most ``pp - s`` inputs);
+* each (stage, microbatch) op emits a rank-LOCAL trace — stage-local layer
+  names, microbatch-sized leaves — and
+  ``core.merger.merge_microbatch_traces`` reassembles the reference-shaped
+  trace (microbatch axis concatenated, names canonicalized via the same
+  ``stage_layer_table`` the staged candidate uses) BEFORE any checking;
+* per-stage gradients accumulate across microbatches on their stage device
+  and are merged into the reference-named global tree for the (once-jitted)
+  optimizer step.
+
+Backward ops recompute their stage's forward from the stashed boundary
+input inside ``jax.vjp`` (stage-granular activation checkpointing) — which
+is exactly the surface the two schedule-layer bugs corrupt:
+
+* ``pp_microbatch_order`` — the backward recompute reads the NEXT
+  microbatch's stashed input, so gradients are accumulated against the
+  wrong microbatch's activations.  Forward — and therefore the loss curve —
+  is byte-identical to the correct schedule;
+* ``pp_stale_boundary`` — stage ``i+1`` consumes the previous microbatch's
+  boundary activation (a stale recv buffer).  Microbatch 0 is correct and
+  every consumed tensor is a real activation, so the loss stays plausible.
+
+Every per-stage forward/backward is jitted exactly once at engine build
+(rewrites ride along as a dict *argument*, so localization-mode calls reuse
+the same compiled steps per rewrite-name signature) — the supervisor's
+``CandidateStep`` once-compiled contract.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.collector import (Trace, _make_probes, flatten_named,
+                                  unflatten_named)
+from repro.core.merger import canonical_stage_name, merge_microbatch_traces
+from repro.core.tap import TraceContext
+from repro.models.model import block_apply
+from repro.parallel.pp import stage_division, stage_layer_table
+
+
+# ---------------------------------------------------------------------------
+# Schedule (pure — property-tested in tests/test_pp1f1b.py)
+# ---------------------------------------------------------------------------
+
+def stage_tables(n_layers: int, pp_size: int,
+                 bugs=frozenset()) -> list[list[tuple[int, int]]]:
+    """Per-stage ``[(executed_layer, canonical_index), ...]`` — the flat
+    ``stage_layer_table`` grouped by owning stage, i.e. the renaming each
+    RANK would apply to its local trace (paper Fig 5)."""
+    stages = stage_division(n_layers, pp_size, bugs)
+    flat = stage_layer_table(n_layers, pp_size, bugs)
+    out, i = [], 0
+    for start, end in stages:
+        out.append(flat[i:i + (end - start)])
+        i += end - start
+    return out
+
+
+def stage_op_stream(pp_size: int, stage: int,
+                    n_microbatches: int) -> list[tuple[str, int, int]]:
+    """Canonical per-stage 1F1B op stream ``[("F"|"B", stage, mb), ...]``:
+    ``min(M, pp - 1 - stage)`` warmup forwards, then one-forward-one-backward
+    pairs, then cooldown backwards (Megatron's non-interleaved schedule)."""
+    M = n_microbatches
+    warm = min(M, pp_size - 1 - stage)
+    ops = [("F", stage, m) for m in range(warm)]
+    for i in range(M - warm):
+        ops.append(("F", stage, warm + i))
+        ops.append(("B", stage, i))
+    ops += [("B", stage, m) for m in range(M - warm, M)]
+    return ops
+
+
+def schedule_1f1b(pp_size: int,
+                  n_microbatches: int) -> list[tuple[str, int, int]]:
+    """Global execution order: a clock-tick merge of the per-stage 1F1B op
+    streams where an op runs as soon as its cross-stage dependency is met
+    (forward (s, m) needs forward (s-1, m); backward (s, m) needs backward
+    (s+1, m)).  Each stage advances at most one op per tick — the host
+    linearization of what per-rank processes execute concurrently."""
+    streams = [stage_op_stream(pp_size, s, n_microbatches)
+               for s in range(pp_size)]
+    ptr = [0] * pp_size
+    done_f, done_b = set(), set()
+    order: list[tuple[str, int, int]] = []
+    total = sum(len(st) for st in streams)
+    while len(order) < total:
+        progressed = False
+        for s in range(pp_size):
+            if ptr[s] >= len(streams[s]):
+                continue
+            d, _, m = streams[s][ptr[s]]
+            ready = (d == "F" and (s == 0 or (s - 1, m) in done_f)) or \
+                    (d == "B" and (s == pp_size - 1 or (s + 1, m) in done_b))
+            if ready:
+                order.append(streams[s][ptr[s]])
+                (done_f if d == "F" else done_b).add((s, m))
+                ptr[s] += 1
+                progressed = True
+        if not progressed:       # impossible for a well-formed 1F1B stream
+            raise RuntimeError("1F1B schedule deadlocked")
+    return order
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class PP1F1BEngine:
+    """Multi-device 1F1B executor for the dense-arch candidate.
+
+    One instance = one compiled pipeline: ``collect(params, batch)`` runs a
+    full 1F1B training iteration (forward + backward + grad accumulation,
+    NO optimizer step) and returns the merged reference-shaped trace, the
+    reference-named global gradient tree (placed on the controller device)
+    and the per-rank ``MergeReport``.
+    """
+
+    def __init__(self, model, ref_params, batch, pp_size: int,
+                 n_microbatches: int, bugs=frozenset()):
+        cfg = model.cfg
+        if cfg.arch_type != "dense":
+            # homogeneous attn_mlp stacks only: stages with aux-producing
+            # blocks (MoE) would need the per-stage aux losses communicated
+            # to the loss stage, which this engine does not implement
+            raise ValueError("the 1F1B engine covers dense arches only "
+                             f"(got arch_type={cfg.arch_type!r})")
+        if pp_size < 2:
+            raise ValueError("the 1F1B pipeline needs pp >= 2 stages")
+        if n_microbatches < 1:
+            raise ValueError("need at least one microbatch")
+        if not isinstance(ref_params.get("layers"), (list, tuple)):
+            raise ValueError("1F1B partitions unstacked layer lists — "
+                             "rebuild the model with scan_layers=False")
+        B = int(np.shape(batch["tokens"])[0])
+        if B % n_microbatches:
+            raise ValueError(f"batch size {B} not divisible into "
+                             f"{n_microbatches} microbatches")
+        devs = jax.devices()
+        if len(devs) < pp_size:
+            raise RuntimeError(
+                f"need {pp_size} devices for {pp_size} pipeline stages, "
+                f"have {len(devs)} — run under "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={pp_size}")
+        self.model, self.cfg = model, cfg
+        self.bugs = frozenset(bugs)
+        self.pp, self.M = pp_size, n_microbatches
+        self.mb_size = B // n_microbatches
+        self.tied = cfg.tie_embeddings
+        self.stages = stage_division(cfg.n_layers, pp_size, self.bugs)
+        self.tables = stage_tables(cfg.n_layers, pp_size, self.bugs)
+        self.schedule = schedule_1f1b(pp_size, n_microbatches)
+        self.meshes = [Mesh(np.array(devs[s:s + 1]), ("stage",))
+                       for s in range(pp_size)]
+        self.places = [NamedSharding(m, P()) for m in self.meshes]
+        self.home = devs[0]     # controller: merged trace + optimizer step
+
+        # tap discovery (chained per-stage eval_shape) + once-jitted steps
+        sds = lambda v: jax.ShapeDtypeStruct(tuple(np.shape(v)),  # noqa: E731
+                                             jnp.result_type(v))
+        mb_sds = {k: jax.ShapeDtypeStruct(
+            (self.mb_size,) + tuple(np.shape(v))[1:], jnp.result_type(v))
+            for k, v in batch.items()}
+        self._fwd, self._bwd = [], []
+        self._probes, self._orders = [], []
+        h_sds = None
+        for s in range(pp_size):
+            p_sds = jax.tree.map(sds, self._slice_params(ref_params, s))
+            out_sds, taps_sds, order = self._discover(s, p_sds, h_sds,
+                                                      mb_sds)
+            self._probes.append({k: jax.device_put(v, self.places[s])
+                                 for k, v in _make_probes(taps_sds, None,
+                                                          True).items()})
+            self._orders.append(order)
+            self._fwd.append(jax.jit(self._fwd_fn(s)))
+            self._bwd.append(jax.jit(self._bwd_fn(s)))
+            if s < pp_size - 1:
+                h_sds = out_sds
+
+    # ---- partitioning ------------------------------------------------------
+    def _slice_params(self, params, s: int) -> dict:
+        """Stage ``s``'s rank-local parameter tree (stage-LOCAL layer list;
+        embedding replicated on first/last stage when tied)."""
+        start, end = self.stages[s]
+        p = {"layers": [params["layers"][i] for i in range(start, end)]}
+        if s == 0:
+            p["embedding"] = params["embedding"]
+        if s == self.pp - 1:
+            p["final_norm"] = params["final_norm"]
+            if self.tied:
+                p["embedding"] = params["embedding"]
+            else:
+                p["lm_head"] = params["lm_head"]
+        return p
+
+    # ---- stage computation -------------------------------------------------
+    def _apply(self, s: int, p, h, mb, ctx):
+        """Stage forward with stage-LOCAL tap names: embeds on stage 0,
+        applies the local layer slice, finishes with norm + loss on the
+        last stage (loss = per-microbatch mean CE, so the mean over equal
+        microbatches equals the reference full-batch loss)."""
+        from repro.models.layers import _logits, cross_entropy, rmsnorm
+        cfg = self.cfg
+        if s == 0:
+            h = self.model.embed(p, mb, ctx)
+        # dense attn_mlp blocks have zero aux loss (enforced in __init__),
+        # so only the loss stage needs to carry it
+        aux = jnp.zeros((), jnp.float32)
+        for local in range(len(self.tables[s])):
+            with ctx.scope(f"layers.{local}"):
+                h, a, _ = block_apply(p["layers"][local], cfg, "attn_mlp",
+                                      h, ctx)
+            if s == self.pp - 1:
+                aux = aux + a
+        if s < self.pp - 1:
+            return h
+        h = rmsnorm(p["final_norm"], h)
+        h = ctx.tap("final_norm_out", h)
+        e = (p["embedding"]["word_embeddings"] if self.tied
+             else p["lm_head"])
+        return cross_entropy(_logits(h, e), mb["labels"]) + aux
+
+    def _discover(self, s, p_sds, h_sds, mb_sds):
+        order: list[str] = []
+
+        def f(p, h, mb):
+            ctx = TraceContext("collect")
+            out = self._apply(s, p, h, mb, ctx)
+            order.clear()
+            order.extend(ctx.fwd.keys())
+            return out, ctx.fwd
+
+        out_sds, taps_sds = jax.eval_shape(f, p_sds, h_sds, mb_sds)
+        return out_sds, taps_sds, list(order)
+
+    def _fwd_fn(self, s: int):
+        def fwd(p, h, mb, rew):
+            ctx = TraceContext("rewrite" if rew else "collect", rewrites=rew)
+            out = self._apply(s, p, h, mb, ctx)
+            return out, ctx.fwd
+        return fwd
+
+    def _bwd_fn(self, s: int):
+        """Backward op: recompute the stage forward from the stashed input
+        inside ``jax.vjp`` (with the act-grad zero probes as primals), seed
+        with the downstream cotangent, return (input grad, param grads,
+        act grads)."""
+        def bwd(p, h, mb, g, rew, pr):
+            if s == 0:
+                def fn(pp_, prr):
+                    ctx = TraceContext("rewrite" if rew else "collect",
+                                       probes=prr, rewrites=rew)
+                    return self._apply(s, pp_, None, mb, ctx)
+                _, vjp = jax.vjp(fn, p, pr)
+                dp, dpr = vjp(g)
+                return None, dp, dpr
+
+            def fn(pp_, hh, prr):
+                ctx = TraceContext("rewrite" if rew else "collect",
+                                   probes=prr, rewrites=rew)
+                return self._apply(s, pp_, hh, mb, ctx)
+            _, vjp = jax.vjp(fn, p, h, pr)
+            dp, dh, dpr = vjp(g)
+            return dh, dp, dpr
+        return bwd
+
+    # ---- batch / rewrite plumbing ------------------------------------------
+    def _split_batch(self, batch) -> list[dict]:
+        bs = self.mb_size
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        return [{k: v[m * bs:(m + 1) * bs] for k, v in b.items()}
+                for m in range(self.M)]
+
+    def _stage_rewrites(self, rewrites):
+        """Canonical full-batch rewrites -> ``[stage][mb] -> {local: value}``
+        (the inverse of the merger's renaming, sliced per microbatch)."""
+        if not rewrites:
+            return None
+        bs = self.mb_size
+        out = []
+        for s in range(self.pp):
+            per_mb = [dict() for _ in range(self.M)]
+            for ln in self._orders[s]:
+                cn = canonical_stage_name(ln, self.tables[s])
+                if cn in rewrites:
+                    v = jnp.asarray(rewrites[cn])
+                    for m in range(self.M):
+                        per_mb[m][ln] = jax.device_put(
+                            v[m * bs:(m + 1) * bs], self.places[s])
+            out.append(per_mb)
+        return out
+
+    # ---- the 1F1B iteration ------------------------------------------------
+    def collect(self, params, batch, rewrites=None):
+        """One full 1F1B training iteration.  Returns ``(merged_trace,
+        grads_tree, merge_report)``; ``grads_tree`` is reference-named and
+        placed on the controller device for the optimizer step."""
+        M, S = self.M, self.pp
+        mbs = self._split_batch(batch)
+        mb_first = [jax.device_put(mb, self.places[0]) for mb in mbs]
+        mb_last = [jax.device_put(mb, self.places[-1]) for mb in mbs]
+        rew = self._stage_rewrites(rewrites)
+        ps = [jax.device_put(self._slice_params(params, s), self.places[s])
+              for s in range(S)]
+        cot = jax.device_put(jnp.float32(1.0 / M), self.places[-1])
+        stale = "pp_stale_boundary" in self.bugs
+        misorder = "pp_microbatch_order" in self.bugs
+
+        boundary = {}                  # (s, m) -> stage-s output activation
+        stash: list[dict] = [dict() for _ in range(S)]
+        g_down = {}                    # (s, m) -> cotangent for stage s out
+        losses: list = [None] * M
+        grads: list = [None] * S
+        records = []
+
+        def mb_arg(s, m):
+            if s == 0:
+                return mb_first[m]
+            if s == S - 1:
+                return mb_last[m]
+            return None
+
+        for d, s, m in self.schedule:
+            r = rew[s][m] if rew else {}
+            if d == "F":
+                if s == 0:
+                    h_in = None
+                else:
+                    # stage-boundary activation recv (explicit transfer);
+                    # the stale-boundary bug reuses the previous
+                    # microbatch's recv buffer
+                    src = m - 1 if (stale and m > 0) else m
+                    h_in = jax.device_put(boundary[(s - 1, src)],
+                                          self.places[s])
+                out, taps = self._fwd[s](ps[s], h_in, mb_arg(s, m), r)
+                stash[s][m] = h_in
+                if s == S - 1:
+                    losses[m] = out
+                else:
+                    boundary[(s, m)] = out
+                if s > 0 and m > 0:
+                    # recv-buffer eviction: entry (s-1, k) feeds forward
+                    # (s, k) and — under the stale-boundary bug — forward
+                    # (s, k+1); once (s, m) ran, (s-1, m-1) is dead, so at
+                    # most two boundary buffers live per stage pair
+                    boundary.pop((s - 1, m - 1), None)
+                tr = Trace()
+                tr.activations = dict(taps)
+                tr.meta.update(stage=s, microbatch=m,
+                               fwd_order=list(self._orders[s]))
+                records.append((s, m, tr))
+            else:
+                # the microbatch-order bug misindexes the activation stash
+                # (and, on stage 0, the token microbatch it re-embeds)
+                src = m + 1 if (misorder and (m + 1) in stash[s]) else m
+                h_in = stash[s][src]
+                mb_in = mb_arg(s, src if s == 0 else m)
+                g = cot if s == S - 1 else jax.device_put(
+                    g_down.pop((s, m)), self.places[s])
+                dh, dp, dpr = self._bwd[s](ps[s], h_in, mb_in, g, r,
+                                           self._probes[s])
+                del stash[s][m]
+                if s > 0:
+                    g_down[(s - 1, m)] = dh
+                grads[s] = (dp if grads[s] is None
+                            else jax.tree.map(jnp.add, grads[s], dp))
+                tr = Trace()
+                tr.act_grads = dict(dpr)
+                tr.param_grads = flatten_named(dp)
+                tr.meta.update(stage=s, microbatch=m)
+                records.append((s, m, tr))
+
+        merged, report = merge_microbatch_traces(records, self.tables, M,
+                                                 place=self.home)
+        loss = losses[0]
+        for m in range(1, M):
+            loss = loss + losses[m]
+        merged.loss = loss / M
+        merged.meta["microbatches"] = M
+        merged.meta["pp"] = S
+        return merged, self._global_grads(params, grads), report
+
+    def _global_grads(self, params, grads):
+        """Per-stage accumulated grads -> reference-named global tree on the
+        controller device.  Stage-local layer indices map to the EXECUTED
+        global layers (a twice-executed layer's contributions sum, exactly
+        like autodiff on the staged candidate); never-executed layers get
+        zero grads; tied-embedding contributions from both pipeline ends
+        are summed (the explicit tied-embedding reduction)."""
+        named: dict = {}
+        for s in range(self.pp):
+            if grads[s] is None:
+                continue
+            start = self.stages[s][0]
+            for n, g in flatten_named(grads[s]).items():
+                if n.startswith("layers."):
+                    local, _, rest = n[len("layers."):].partition(".")
+                    tgt = f"layers.{start + int(local)}.{rest}"
+                else:
+                    tgt = n
+                g = jax.device_put(g, self.home)
+                named[tgt] = named[tgt] + g if tgt in named else g
+        tpl = flatten_named(params)
+        for n, v in tpl.items():
+            if n not in named:
+                named[n] = jnp.zeros(np.shape(v), jnp.result_type(v))
+        return unflatten_named(named, params)
+
+
+# ---------------------------------------------------------------------------
+# Supervisor / harness entry points (the CandidateStep contract)
+# ---------------------------------------------------------------------------
+
+def make_pp1f1b_train_step(model, ref_params, opt, batch, pp_size: int,
+                           microbatches: int, bugs=frozenset()):
+    """Once-compiled stateful 1F1B candidate train step (supervisor
+    contract): ``step(params, opt_state, batch) -> (Trace, new_params,
+    new_opt_state)``.  The per-stage fwd/bwd jits and the optimizer update
+    compile exactly once and are reused every supervised step and bisection
+    replay."""
+    eng = PP1F1BEngine(model, ref_params, batch, pp_size, microbatches,
+                       bugs)
+    upd = jax.jit(opt.update)
+
+    def step(params, opt_state, b):
+        tr, grads, _ = eng.collect(params, b)
+        new_p, new_st, info = upd(params, grads, opt_state)
+        tr.main_grads = flatten_named(info.main_grads)
+        tr.params_post = flatten_named(new_p)
+        tr.grad_norm = info.grad_norm
+        return tr, new_p, new_st
+
+    params0 = jax.tree.map(jnp.asarray, ref_params)
+    return step, params0, opt.init(params0)
+
+
+def make_pp1f1b_runner(model, params, pp_size: int, microbatches: int,
+                       opt=None, opt_state=None, bugs=frozenset()):
+    """``runner(batch, rewrites) -> Trace`` over the 1F1B engine — the
+    rewrite-mode localization side of the candidate (engine built lazily
+    from the first batch's shapes)."""
+    eng = None
+
+    def run(batch, rewrites=None) -> Trace:
+        nonlocal eng
+        if eng is None:
+            eng = PP1F1BEngine(model, params, batch, pp_size, microbatches,
+                               bugs)
+        tr, grads, _ = eng.collect(params, batch, rewrites=rewrites)
+        if opt is not None:
+            st = opt_state if opt_state is not None else opt.init(params)
+            new_p, _, info = opt.update(params, grads, st)
+            tr.main_grads = flatten_named(info.main_grads)
+            tr.params_post = flatten_named(new_p)
+            tr.grad_norm = info.grad_norm
+        return tr
+
+    return run

@@ -51,7 +51,7 @@ import numpy as np
 
 from repro.core import canonical as C
 from repro.core.checker import (DEFAULT_KINDS, Report, collect_section_pairs,
-                                report_from_errs)
+                                merge_problems_of, report_from_errs)
 from repro.core.relerr_engine import _to_rel_err, sq_norms_async
 from repro.core.thresholds import Thresholds
 
@@ -91,10 +91,16 @@ class AsyncCheckPipeline:
 
     def __init__(self, thresholds: Thresholds, window: int = 2,
                  kinds=DEFAULT_KINDS, kind_mult=None,
-                 drift_alpha: float = 0.125):
+                 drift_alpha: float = 0.125, kind_scale: float = 1.0):
         self.window = max(0, int(window))
         self.kinds = kinds
         self.drift_alpha = drift_alpha
+        # recipe-supplied widening of the per-step kind margins: candidates
+        # whose numerics legitimately reassociate more than the reference
+        # (1F1B microbatch grad accumulation sums M partial reductions)
+        # declare their allowance here.  param_post_step is exempt — it is
+        # the slow-drift signal and stays at multiplier 1.0.
+        self.kind_scale = float(kind_scale)
         # threshold epochs: (from_step, thresholds, kind_mult), sorted; a
         # step's check uses the last epoch with from_step <= step
         self._epochs: list[tuple[int, Thresholds, dict]] = [
@@ -140,12 +146,17 @@ class AsyncCheckPipeline:
 
     def scales(self, step: int) -> dict:
         """Per-kind threshold scale at ``step``.  Step 0 compares identical
-        states on the estimation batch — exact single-step semantics."""
+        states on the estimation batch — exact single-step semantics, except
+        the recipe's ``kind_scale``: a candidate's own reassociation (1F1B
+        microbatch accumulation) is present from the very first step."""
+        def recipe(k):
+            return self.kind_scale if k != C.KIND_PARAM_POST else 1.0
         if step == 0:
-            return {k: 1.0 for k in self.kinds}
+            return {k: recipe(k) for k in self.kinds}
         mult = self._epoch_for(step)[2]
         growth = 1.0 + self.drift_alpha * step
-        return {k: mult.get(k, 1.0) * growth for k in self.kinds}
+        return {k: mult.get(k, 1.0) * growth * recipe(k)
+                for k in self.kinds}
 
     def param_post_threshold(self, name: str, step: int) -> float:
         """Post-step parameter threshold at ``step`` — the bisection
@@ -166,7 +177,8 @@ class AsyncCheckPipeline:
                                                          self.kinds)
         dev = sq_norms_async(la, lb)
         self._clock += 1
-        self._inflight.append((step, entries, missing, dev, self._clock))
+        self._inflight.append((step, entries, missing,
+                               merge_problems_of(cand), dev, self._clock))
         self.submitted += 1
         done = []
         while len(self._inflight) > self.window:
@@ -183,7 +195,7 @@ class AsyncCheckPipeline:
         self._clock += 1
         done = []
         while self._inflight:
-            dev, born = self._inflight[0][3], self._inflight[0][4]
+            dev, born = self._inflight[0][4], self._inflight[0][5]
             ready = getattr(dev, "is_ready", None)
             if ready is not None:
                 if not ready():
@@ -207,13 +219,16 @@ class AsyncCheckPipeline:
                                                          self.kinds)
         errs = _to_rel_err(np.asarray(sq_norms_async(la, lb), np.float64))
         rep = report_from_errs(entries, errs, self.thresholds_for(step),
-                               missing=missing, thr_scale=self.scales(step))
+                               missing=missing, thr_scale=self.scales(step),
+                               merge_problems=merge_problems_of(cand))
         return StepCheck(step, rep)
 
     def _resolve(self) -> StepCheck:
-        step, entries, missing, dev, _ = self._inflight.popleft()
+        step, entries, missing, merge_problems, dev, _ = \
+            self._inflight.popleft()
         errs = _to_rel_err(np.asarray(dev, np.float64))
         rep = report_from_errs(entries, errs, self.thresholds_for(step),
-                               missing=missing, thr_scale=self.scales(step))
+                               missing=missing, thr_scale=self.scales(step),
+                               merge_problems=merge_problems)
         self.resolved += 1
         return StepCheck(step, rep)

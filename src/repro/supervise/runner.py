@@ -74,23 +74,37 @@ class CandidateStep:
     make_runner: Callable
     eps: float = MACHINE_EPS["float32"]
     name: str = "candidate"
+    # widening of the supervised per-step kind margins this recipe's
+    # numerics need on top of the reference estimate (param_post exempt):
+    # the 1F1B engine accumulates M per-microbatch partial reductions, a
+    # reassociation the single-batch estimate cannot see
+    kind_scale: float = 1.0
 
     @classmethod
     def build(cls, cfg, pcfg: ParallelConfig, params, opt,
               batch) -> "CandidateStep":
-        """Dispatch on ``pcfg`` (shard_map / pp / fp8) via ``parallel.api``."""
+        """Dispatch on ``pcfg`` (shard_map / pp / 1F1B / fp8) via
+        ``parallel.api``."""
+        import math
         step, p0, s0 = make_candidate_train_step(cfg, pcfg, params, opt,
                                                  batch)
         eps = (MACHINE_EPS["float8_e4m3fn"] if pcfg.fp8
                else MACHINE_EPS["float32"])
-        name = ("fp8-" + pcfg.fp8 if pcfg.fp8
-                else f"pp{pcfg.pp}" if pcfg.pp > 1
-                else "shard_map")
+        kind_scale = 1.0
+        if pcfg.recipe_kind == "pp_1f1b":
+            name = f"pp1f1b{pcfg.pp}x{pcfg.microbatches}"
+            kind_scale = max(2.0, math.sqrt(pcfg.microbatches))
+        elif pcfg.fp8:
+            name = "fp8-" + pcfg.fp8
+        elif pcfg.pp > 1:
+            name = f"pp{pcfg.pp}"
+        else:
+            name = "shard_map"
         return cls(
             step=step, params0=p0, opt_state0=s0,
             make_runner=lambda p, s: make_candidate_runner(
                 cfg, pcfg, p, opt, s),
-            eps=eps, name=name)
+            eps=eps, name=name, kind_scale=kind_scale)
 
 
 @dataclass
@@ -234,7 +248,8 @@ class Supervisor:
         # live re-estimation lands, only the step-0 estimate exists and the
         # full batch-to-batch allowance is still needed
         self.pipe = AsyncCheckPipeline(thr, window=sc.async_window,
-                                       drift_alpha=sc.drift_alpha)
+                                       drift_alpha=sc.drift_alpha,
+                                       kind_scale=self.candidate.kind_scale)
 
         def loss_call(p, b, ctx):
             return self.model.loss(p, b, ctx=ctx)[0]

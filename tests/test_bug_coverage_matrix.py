@@ -1,0 +1,181 @@
+"""Cross-recipe supervised bug-coverage matrix (ISSUE 4).
+
+Every ``bugs/registry.py`` entry must be
+
+  (a) expressible by at least one candidate recipe,
+  (b) flagged by the streaming supervisor under that recipe, and
+  (c) localized to its ``expected_module``;
+
+and bug/recipe combinations that CANNOT express a bug must hit the CLI
+refusal path (never a meaningless clean pass).  The candidate table below is
+derived from each bug's ``requires`` at collection time, so registering a
+future bug without a supervised e2e path fails ``test_every_bug_has_a_
+supervised_recipe`` immediately.
+"""
+import dataclasses
+import fnmatch
+
+import pytest
+
+from repro.bugs.registry import BUGS
+
+# ---------------------------------------------------------------------------
+# candidate table: ordered; the FIRST entry whose features cover a bug's
+# ``requires`` runs it.  (name, pcfg kwargs, needs_moe_arch)
+# ---------------------------------------------------------------------------
+
+CANDIDATES = [
+    ("dense dp2tp2", dict(dp=2, tp=2), False),
+    ("dense dp2tp2sp", dict(dp=2, tp=2, sp=True), False),
+    ("dense dp2cp2tp2", dict(dp=2, cp=2, tp=2), False),
+    ("zero1 dp2", dict(dp=2, zero1=True), False),
+    ("moe tp2", dict(tp=2), True),
+    ("pp staged", dict(pp=2), False),
+    ("pp-1f1b", dict(pp=2, pp_schedule="1f1b", microbatches=2), False),
+    ("fp8 tile128", dict(fp8="tile128"), False),
+]
+
+
+def _features(kwargs, moe):
+    from repro.parallel.api import ParallelConfig
+    return (ParallelConfig(**kwargs).features
+            | ({"moe"} if moe else set()))
+
+
+def candidate_for(spec):
+    for name, kwargs, moe in CANDIDATES:
+        if set(spec.requires) <= _features(kwargs, moe):
+            return name, kwargs, moe
+    return None
+
+
+# a bug whose only effect is a wrong parameter UPDATE has no forward /
+# backward trace to blame: propagation localization correctly names the
+# optimizer stage (the paper's step report does the same for ZeRO bugs)
+def _loc_ok(spec, loc):
+    if spec.expected_module == "loss":
+        return True                     # loss-scaling family: no module
+    if fnmatch.fnmatchcase(loc, spec.expected_module):
+        return True
+    return loc == "optimizer" and "update" in spec.impact
+
+
+def test_every_bug_has_a_supervised_recipe():
+    missing = [bid for bid, spec in BUGS.items()
+               if candidate_for(spec) is None]
+    assert not missing, (
+        f"bugs {missing} are not expressible by any supervised candidate "
+        f"recipe — extend CANDIDATES in this matrix (and the recipe "
+        f"implementations) when registering new bugs")
+
+
+# ---------------------------------------------------------------------------
+# supervised e2e per bug
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setups():
+    """Lazily-built (cfg, model, params) per arch, shared across bugs."""
+    import jax
+
+    from repro.configs.base import MoEConfig, get_config
+    from repro.models.model import Model
+    cache = {}
+
+    def get(moe: bool, n_layers: int):
+        key = (moe, n_layers)
+        if key not in cache:
+            cfg = dataclasses.replace(get_config("gpt-paper").reduced(),
+                                      n_layers=n_layers, vocab=256,
+                                      tie_embeddings=True)
+            if moe:
+                cfg = dataclasses.replace(
+                    cfg, arch_type="moe",
+                    moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=128,
+                                  capacity_factor=0.0))
+            m = Model(cfg)
+            cache[key] = (cfg, m, m.init(jax.random.PRNGKey(0)))
+        return cache[key]
+
+    return get
+
+
+@pytest.mark.multidevice
+@pytest.mark.parametrize("bug_id", sorted(BUGS))
+def test_bug_flagged_and_localized_under_supervision(
+        forced_devices, setups, tmp_path, bug_id):
+    from repro.optim.adamw import AdamW
+    from repro.parallel.api import ParallelConfig
+    from repro.supervise import Supervisor, SuperviseConfig
+    spec = BUGS[bug_id]
+    picked = candidate_for(spec)
+    assert picked is not None, f"no recipe expresses {bug_id}"
+    name, kwargs, moe = picked
+    # pipeline recipes need >= 2 layers per meaningful stage
+    n_layers = 4 if "pp" in spec.requires else 2
+    cfg, model, params = setups(moe, n_layers)
+    pcfg = ParallelConfig(bugs=frozenset([bug_id]), **kwargs)
+    sup = Supervisor(model, cfg, pcfg, AdamW(lr=1e-3), params=params,
+                     scfg=SuperviseConfig(steps=3, ckpt_every=2,
+                                          work_dir=str(tmp_path)),
+                     batch_size=2 if pcfg.pp == 1 else 4, seq_len=16)
+    res = sup.run()
+    assert res.flagged, (f"{bug_id} NOT flagged under {name}:\n"
+                         + res.summary())
+    assert res.first_bad_step is not None
+    loc = res.localized_module or "-"
+    assert _loc_ok(spec, loc), (
+        f"{bug_id} under {name}: localized to {loc!r}, expected "
+        f"{spec.expected_module!r}\n" + res.summary())
+
+
+# ---------------------------------------------------------------------------
+# unexpressible combinations must hit the CLI refusal path (PR 3 contract)
+# ---------------------------------------------------------------------------
+
+def _cli_args(**over):
+    import argparse
+    ns = argparse.Namespace(
+        arch=None, recipe=None, bug=None, dp=None, cp=None, tp=None,
+        sp=False, zero1=False, pp=2, microbatches=4, batch=4)
+    for k, v in over.items():
+        setattr(ns, k, v)
+    return ns
+
+
+@pytest.mark.parametrize("over", [
+    # shard_map bug under a non-shard_map recipe
+    dict(recipe="fp8-global", bug="tp_missing_row_psum"),
+    dict(recipe="pp", bug="tp_wrong_embedding_mask"),
+    dict(recipe="pp-1f1b", bug="zero_skipped_update"),
+    # 1F1B schedule bugs need the 1F1B engine, not the staged candidate
+    dict(recipe="pp", bug="pp_microbatch_order"),
+    dict(recipe="pp", bug="pp_stale_boundary"),
+    # recipe bug under an explicit conflicting recipe
+    dict(recipe="dense", bug="pp_stale_boundary"),
+    dict(recipe="fp8-tile128", bug="pp_wrong_stage_division"),
+    # shard_map flags refused for pipeline/fp8 recipes
+    dict(recipe="pp-1f1b", tp=2),
+    # 1F1B needs >= 2 microbatches dividing the batch
+    dict(recipe="pp-1f1b", microbatches=1),
+    dict(recipe="pp-1f1b", microbatches=3, batch=4),
+    # a bug whose features the built candidate cannot express
+    dict(recipe="dense", bug="fp8_stale_scale"),
+])
+def test_unexpressible_combinations_hit_the_cli_refusal_path(over):
+    from repro.launch.supervise import build_pcfg
+    args = _cli_args(**over)
+    requires = set(BUGS[args.bug].requires) if args.bug else set()
+    with pytest.raises(SystemExit):
+        build_pcfg(args, requires)
+
+
+def test_bug_pulls_its_recipe_in_without_explicit_flag():
+    """--bug pp_stale_boundary alone must drive the 1F1B engine."""
+    from repro.launch.supervise import build_pcfg
+    args = _cli_args(bug="pp_stale_boundary")
+    recipe, pcfg = build_pcfg(args,
+                              set(BUGS["pp_stale_boundary"].requires))
+    assert recipe == "pp-1f1b"
+    assert pcfg.recipe_kind == "pp_1f1b"
+    assert pcfg.microbatches == 4

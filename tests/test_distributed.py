@@ -1,24 +1,14 @@
-"""Distributed TTrace integration tests (8 forced host devices, subprocess —
-the main pytest process must keep seeing 1 device)."""
+"""Distributed TTrace integration tests (8 forced host devices, run in
+subprocess workers via ``conftest.run_in_worker`` — isolation keeps each
+case's jit/tap caches and device state independent of the main process,
+which itself runs with 8 forced devices since the 1F1B engine landed)."""
 import os
-import subprocess
-import sys
-import textwrap
 
 import pytest
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run(code: str, devices: int = 8, timeout: int = 1200) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, timeout=timeout,
-                         env=env, cwd=ROOT)
-    assert out.returncode == 0, out.stdout + "\n" + out.stderr
-    return out.stdout
+def _run(code: str, devices: int = 8, timeout: int = 2400) -> str:
+    from conftest import run_in_worker
+    return run_in_worker(code, devices=devices, timeout=timeout)
 
 
 PREAMBLE = """

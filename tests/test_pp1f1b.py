@@ -1,0 +1,318 @@
+"""Real multi-device 1F1B pipeline: schedule properties, per-rank trace
+merging, and equivalence against the single-device reference.
+
+Hypothesis property suite (ISSUE 4): for arbitrary (L, pp, microbatches) —
+every (stage, microbatch) forward and backward executes exactly once, the
+backward order is the 1F1B interleave, merged trace names biject onto the
+single-device reference trace names, and gradient accumulation equals the
+full-batch gradient within threshold.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.merger import (MergeReport, canonical_stage_name,
+                               merge_microbatch_traces)
+from repro.parallel.pp1f1b import (schedule_1f1b, stage_op_stream,
+                                   stage_tables)
+
+
+# ---------------------------------------------------------------------------
+# schedule properties (pure, no jax)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=80, deadline=None)
+@given(pp=st.integers(2, 8), M=st.integers(1, 12))
+def test_schedule_every_op_exactly_once_and_dependency_valid(pp, M):
+    order = schedule_1f1b(pp, M)
+    assert len(order) == pp * 2 * M
+    fwd, bwd = set(), set()
+    for d, s, m in order:
+        if d == "F":
+            # forward (s, m) needs forward (s-1, m)'s boundary activation
+            assert s == 0 or (s - 1, m) in fwd, (pp, M, order)
+            assert (s, m) not in fwd
+            fwd.add((s, m))
+        else:
+            # backward (s, m) needs backward (s+1, m)'s boundary gradient,
+            # and its own forward stash
+            assert s == pp - 1 or (s + 1, m) in bwd, (pp, M, order)
+            assert (s, m) in fwd
+            assert (s, m) not in bwd
+            bwd.add((s, m))
+    assert fwd == bwd == {(s, m) for s in range(pp) for m in range(M)}
+
+
+@settings(max_examples=80, deadline=None)
+@given(pp=st.integers(2, 8), M=st.integers(1, 12))
+def test_schedule_per_stage_order_is_the_1f1b_interleave(pp, M):
+    """Each stage's subsequence of the global order IS its canonical 1F1B
+    stream: warmup forwards, alternating (F, B), cooldown backwards — so
+    backwards run strictly in microbatch order and the last stage strictly
+    alternates F/B."""
+    order = schedule_1f1b(pp, M)
+    for s in range(pp):
+        ops = [op for op in order if op[1] == s]
+        assert ops == stage_op_stream(pp, s, M)
+        assert [m for d, _, m in ops if d == "B"] == list(range(M))
+    last = [d for d, s, _ in order if s == pp - 1]
+    assert last == ["F", "B"] * M
+
+
+@settings(max_examples=80, deadline=None)
+@given(pp=st.integers(2, 8), M=st.integers(1, 12))
+def test_schedule_stash_stays_bounded(pp, M):
+    """The 1F1B memory property: stage s never stashes more than
+    min(M, pp - s) microbatch inputs (warmup depth + the in-flight one)."""
+    order = schedule_1f1b(pp, M)
+    depth = [0] * pp
+    for d, s, m in order:
+        depth[s] += 1 if d == "F" else -1
+        assert depth[s] <= min(M, pp - s), (pp, M, s)
+
+
+@settings(max_examples=100, deadline=None)
+@given(L=st.integers(1, 48), pp=st.integers(2, 12))
+def test_stage_tables_partition_the_flat_renaming(L, pp):
+    pp = min(pp, max(L, 2))
+    tables = stage_tables(L, pp)
+    # concatenated per-stage tables == the flat table; canonical names
+    # biject onto 0..L-1 (the reference layer numbering)
+    flat = [e for t in tables for e in t]
+    assert [e for e, _ in flat] == list(range(L))
+    assert sorted(c for _, c in flat) == list(range(L))
+    # the buggy division's tables stay collision-free (spill indices)
+    bad = stage_tables(L, pp, frozenset(["pp_wrong_stage_division"]))
+    canons = [c for t in bad for _, c in t]
+    assert len(canons) == len(set(canons))
+
+
+def test_canonical_stage_name_renames_layers_only():
+    table = [(2, 2), (3, 3)]
+    assert canonical_stage_name("layers.1.mlp/input", table) == \
+        "layers.3.mlp/input"
+    assert canonical_stage_name("layers.0.self_attention.linear_qkv.w",
+                                table) == \
+        "layers.2.self_attention.linear_qkv.w"
+    assert canonical_stage_name("embedding/output", table) == \
+        "embedding/output"
+    with pytest.raises(KeyError):
+        canonical_stage_name("layers.5.mlp/input", table)
+
+
+# ---------------------------------------------------------------------------
+# per-rank merge verification (synthetic records, no model)
+# ---------------------------------------------------------------------------
+
+def _rec(stage, mb, act=None, ag=None, pg=None):
+    from repro.core.collector import Trace
+    tr = Trace()
+    if act: tr.activations = act
+    if ag: tr.act_grads = ag
+    if pg: tr.param_grads = pg
+    return (stage, mb, tr)
+
+
+def _tables(L=4, pp=2):
+    return stage_tables(L, pp)
+
+
+def test_merge_concatenates_microbatches_and_canonicalizes():
+    x0, x1 = np.ones((2, 3), np.float32), 2 * np.ones((2, 3), np.float32)
+    recs = [
+        _rec(0, 0, act={"layers.0.mlp/output": x0},
+             pg={"layers.1.mlp.down.w": x0}),
+        _rec(0, 1, act={"layers.0.mlp/output": x1},
+             pg={"layers.1.mlp.down.w": x1}),
+        _rec(1, 0, act={"layers.0.mlp/output": x0}),
+        _rec(1, 1, act={"layers.0.mlp/output": x1}),
+    ]
+    merged, rep = merge_microbatch_traces(recs, _tables(), 2)
+    assert rep.ok, rep.problems()
+    # stage 0 local layers.0 stays layers.0; stage 1 local layers.0 -> 2
+    assert set(merged.activations) == {"layers.0.mlp/output",
+                                       "layers.2.mlp/output"}
+    np.testing.assert_array_equal(
+        merged.activations["layers.0.mlp/output"], np.concatenate([x0, x1]))
+    # param-grad contributions accumulate across microbatches
+    np.testing.assert_array_equal(
+        merged.param_grads["layers.1.mlp.down.w"], x0 + x1)
+    assert merged.meta["merge_report"] is rep
+
+
+def test_merge_reports_omission_overlap_and_collision():
+    x = np.ones((2, 2), np.float32)
+    # omission: stage 0 contributed mb 0 only (of 2)
+    _, rep = merge_microbatch_traces(
+        [_rec(0, 0, act={"layers.0.mlp/output": x})], _tables(), 2)
+    assert not rep.ok and rep.omission == 1
+    # overlap: mb 0 contributed twice
+    _, rep = merge_microbatch_traces(
+        [_rec(0, 0, act={"layers.0.mlp/output": x}),
+         _rec(0, 0, act={"layers.0.mlp/output": x})], _tables(), 1)
+    assert not rep.ok and rep.overlap == 1
+    # out-of-grid record
+    _, rep = merge_microbatch_traces([_rec(7, 0, act={"a": x})],
+                                     _tables(), 1)
+    assert not rep.ok and rep.rank_problems
+    # tied params (non-layer names) sum instead of colliding
+    merged, rep = merge_microbatch_traces(
+        [_rec(0, 0, pg={"embedding.word_embeddings": x}),
+         _rec(1, 0, pg={"embedding.word_embeddings": x})], _tables(), 1)
+    assert rep.ok
+    np.testing.assert_array_equal(
+        merged.param_grads["embedding.word_embeddings"], 2 * x)
+
+
+def test_merge_problems_fail_the_check_report():
+    """A coverage violation must fail the differential check even when all
+    compared values agree."""
+    from repro.core.checker import compare_traces
+    from repro.core.collector import Trace
+    from repro.core.thresholds import Thresholds
+    x = np.ones((2, 2), np.float32)
+    ref = Trace()
+    ref.activations = {"layers.0.mlp/output": np.concatenate([x, x])}
+    merged, rep = merge_microbatch_traces(
+        [_rec(0, 0, act={"layers.0.mlp/output": x}),
+         _rec(0, 1, act={"layers.0.mlp/output": x}),
+         _rec(0, 1, act={"layers.0.mlp/output": x})], _tables(), 2)
+    assert not rep.ok
+    report = compare_traces(ref, merged, Thresholds(eps=2.0 ** -24))
+    assert not report.passed and report.merge_problems
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence vs the single-device reference (needs forced devices)
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg(L):
+    from repro.configs.base import get_config
+    return dataclasses.replace(
+        get_config("gpt-paper").reduced(), n_layers=L, d_model=64,
+        n_heads=2, n_kv_heads=2, d_head=32, d_ff=128, vocab=128,
+        tie_embeddings=True)
+
+
+def _engine_setup(L, pp, M, bugs=frozenset(), batch_size=4):
+    import jax
+    from repro.data.synthetic import make_batch
+    from repro.models.model import Model
+    from repro.parallel.pp1f1b import PP1F1BEngine
+    cfg = _tiny_cfg(L)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, batch_size, 16)
+    eng = PP1F1BEngine(m, params, batch, pp, M, bugs)
+    return cfg, m, params, batch, eng
+
+
+@pytest.mark.multidevice
+@settings(max_examples=6, deadline=None)
+@given(L=st.integers(2, 6), pp=st.integers(2, 4), M=st.sampled_from([1, 2, 4]))
+def test_engine_names_biject_and_grads_accumulate_to_full_batch(
+        forced_devices, L, pp, M):
+    """The merged per-rank trace carries EXACTLY the reference tensor names,
+    and microbatch-accumulated gradients equal the full-batch gradient
+    within FP-threshold distance."""
+    from repro.core.collector import flatten_named, trace_train_step
+    from repro.core.relerr_engine import rel_err_np
+    cfg, m, params, batch, eng = _engine_setup(L, pp, M)
+    tr, grads, rep = eng.collect(params, batch)
+    assert rep.ok, rep.problems()
+    ref_tr, _, _ = trace_train_step(m, params, batch)
+    # name bijection, per section
+    assert set(tr.activations) == set(ref_tr.activations)
+    assert set(tr.act_grads) == set(ref_tr.act_grads)
+    assert set(tr.param_grads) == set(ref_tr.param_grads)
+    assert np.isclose(float(tr.loss), ref_tr.loss, rtol=1e-5)
+    # gradient accumulation == full-batch gradients within threshold
+    g_named = flatten_named(grads)
+    for n, g_ref in ref_tr.param_grads.items():
+        err = rel_err_np(np.asarray(g_ref), np.asarray(g_named[n]))
+        assert err < 1e-4, (n, err, L, pp, M)
+    # ... and the merged trace's accumulated param grads agree too
+    for n in ref_tr.param_grads:
+        err = rel_err_np(np.asarray(ref_tr.param_grads[n]),
+                         np.asarray(tr.param_grads[n]))
+        assert err < 1e-4, (n, err)
+
+
+@pytest.mark.multidevice
+def test_engine_one_shot_check_clean_and_stale_boundary(forced_devices):
+    """ttrace_check over the 1F1B runner: clean passes, the stale-boundary
+    schedule bug is flagged at the first layer of stage 1."""
+    import jax
+    from repro.core.harness import make_model_runner, ttrace_check
+    from repro.data.synthetic import make_batch
+    from repro.models.model import Model
+    from repro.parallel.api import ParallelConfig, make_candidate_runner
+    cfg = _tiny_cfg(4)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 4, 16)
+    ref = make_model_runner(m, params)
+    clean = make_candidate_runner(
+        cfg, ParallelConfig(pp=2, pp_schedule="1f1b", microbatches=2),
+        params)
+    res = ttrace_check(ref, clean, batch, localize=False)
+    assert res.passed, res.report.summary()
+    buggy = make_candidate_runner(
+        cfg, ParallelConfig(pp=2, pp_schedule="1f1b", microbatches=2,
+                            bugs=frozenset(["pp_stale_boundary"])),
+        params)
+    res = ttrace_check(ref, buggy, batch, localize=False)
+    assert not res.passed
+    assert np.isfinite(res.candidate.loss)          # silent, not a crash
+    # stage 1 owns layers 2..3: divergence enters at layer 2
+    assert (res.report.localized or "").startswith("layers.2")
+
+
+@pytest.mark.multidevice
+def test_microbatch_order_bug_leaves_forward_untouched(forced_devices):
+    """pp_microbatch_order corrupts ONLY the backward: merged activations
+    (and the loss) are byte-identical to the clean engine — the loss curve
+    is blind to it, the gradient trace is not."""
+    cfg, m, params, batch, eng = _engine_setup(4, 2, 4)
+    tr_clean, g_clean, _ = eng.collect(params, batch)
+    _, _, _, _, eng_bug = _engine_setup(4, 2, 4,
+                                        frozenset(["pp_microbatch_order"]))
+    tr_bug, g_bug, rep = eng_bug.collect(params, batch)
+    assert rep.ok
+    assert float(tr_clean.loss) == float(tr_bug.loss)
+    for n in tr_clean.activations:
+        np.testing.assert_array_equal(tr_clean.activations[n],
+                                      tr_bug.activations[n])
+    from repro.core.collector import flatten_named
+    gc, gb = flatten_named(g_clean), flatten_named(g_bug)
+    assert any(not np.allclose(np.asarray(gc[n]), np.asarray(gb[n]),
+                               rtol=1e-3)
+               for n in gc), "backward bug never expressed"
+
+
+@pytest.mark.multidevice
+def test_supervisor_pp1f1b_clean_run_passes(forced_devices, tmp_path):
+    import jax
+    from repro.models.model import Model
+    from repro.optim.adamw import AdamW
+    from repro.parallel.api import ParallelConfig
+    from repro.supervise import Supervisor, SuperviseConfig
+    cfg = _tiny_cfg(4)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    sup = Supervisor(m, cfg, ParallelConfig(pp=2, pp_schedule="1f1b",
+                                            microbatches=2),
+                     AdamW(lr=1e-3), params=params,
+                     scfg=SuperviseConfig(steps=4, ckpt_every=2,
+                                          work_dir=str(tmp_path)),
+                     batch_size=4, seq_len=16)
+    res = sup.run()
+    assert res.passed, res.summary()
+    assert sup.candidate.name == "pp1f1b2x2"
+    assert sup.pipe.kind_scale >= 2.0    # the microbatch reassociation margin

@@ -302,8 +302,18 @@ def test_trace_pair_step_matches_serial():
                      C.KIND_MAIN_GRAD, C.KIND_PARAM_POST):
             ps, ss = pair_tr.section(kind), ser_tr.section(kind)
             assert set(ps) == set(ss)
+            # post-step params pass through Adam's m/sqrt(v) normalization:
+            # on the FIRST step u = g/(|g|+eps) ~= sign(g), so an element
+            # whose vmapped-vs-serial gradient reassociation noise straddles
+            # zero moves the update by up to 2*lr in ABSOLUTE terms — no
+            # rtol absorbs that, and which elements flip varies with the
+            # compile's reduction tiling (8-forced-device CPU).  Bound the
+            # kind by its mathematical worst case, 2*lr (+ margin); the
+            # production checker widens this kind the same way
+            # (thresholds.Thresholds.kind_margins).
+            atol = 2.5e-3 if kind == C.KIND_PARAM_POST else 2e-5
             for name in ps:
                 np.testing.assert_allclose(
                     np.asarray(ps[name], np.float32),
                     np.asarray(ss[name], np.float32),
-                    rtol=2e-4, atol=2e-5, err_msg=f"{kind}:{name}")
+                    rtol=2e-4, atol=atol, err_msg=f"{kind}:{name}")

@@ -1,9 +1,6 @@
 """Streaming supervisor: pipeline backpressure, trace-ring spill/pin
 eviction, and end-to-end multi-step bug detection with bisection."""
 import os
-import subprocess
-import sys
-import textwrap
 
 import numpy as np
 import pytest
@@ -12,9 +9,6 @@ from repro.core.collector import Trace
 from repro.core.thresholds import Thresholds
 from repro.supervise.pipeline import AsyncCheckPipeline
 from repro.supervise.store import TraceRing, load_trace, save_trace
-
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
 
 def _mk_trace(val: float, seed: int = 0) -> Trace:
     rng = np.random.default_rng(seed)
@@ -314,15 +308,9 @@ def test_supervisor_detects_recompute_bug_and_bisects(tmp_path):
 # end-to-end (8 forced host devices, subprocess)
 # ---------------------------------------------------------------------------
 
-def _run(code: str, devices: int = 8, timeout: int = 1200) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, timeout=timeout,
-                         env=env, cwd=ROOT)
-    assert out.returncode == 0, out.stdout + "\n" + out.stderr
-    return out.stdout
+def _run(code: str, devices: int = 8, timeout: int = 2400) -> str:
+    from conftest import run_in_worker
+    return run_in_worker(code, devices=devices, timeout=timeout)
 
 
 PREAMBLE = """

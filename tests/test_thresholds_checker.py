@@ -115,3 +115,91 @@ def test_ttrace_detects_single_device_bug_and_localizes():
                        make_model_runner(m, bad), batch, localize=True)
     assert not res.passed
     assert "layers.1.mlp" in res.localized_module
+
+
+# ---------------------------------------------------------------------------
+# pair-collection unification (ISSUE 4): trace_fn_pair and the supervised
+# re-estimator share ONE build-once vmapped pair collection — thresholds
+# from the one-shot fused path and from make_pair_estimator must be
+# identical, not merely close
+# ---------------------------------------------------------------------------
+
+def _float_net():
+    import jax.nn
+    import jax.numpy as jnp
+    from repro.core.tap import ensure_ctx
+
+    def loss_call(params, batch, ctx):
+        ctx = ensure_ctx(ctx)
+        h = batch["x"]
+        for i, p in enumerate(params["layers"]):
+            with ctx.scope(f"layers.{i}.mlp"):
+                h = ctx.tap("input", h)
+                h = jax.nn.gelu(h @ p["w"])
+                h = ctx.tap("output", h)
+        return (h.astype(jnp.float32) ** 2).mean()
+
+    return loss_call
+
+
+def test_pair_estimator_matches_one_shot_fused_estimation():
+    """Float-input path: estimate_thresholds' fused pair run (trace_fn_pair)
+    and make_pair_estimator at step 0 perturb with the same seeds and now
+    run the same compiled collection — their per-tensor estimates must
+    agree exactly."""
+    import numpy as np
+
+    from repro.core.collector import trace_fn_pair, trace_fn_step
+    from repro.core.thresholds import make_pair_estimator
+    key = jax.random.PRNGKey(0)
+    params = {"layers": [
+        {"w": 0.2 * jax.random.normal(jax.random.fold_in(key, i), (32, 32))}
+        for i in range(2)]}
+    batch = {"x": np.asarray(jax.random.normal(jax.random.PRNGKey(9),
+                                               (4, 32)))}
+    loss_call = _float_net()
+    opt = AdamW(lr=1e-3)
+    st = opt.init(params)
+
+    def runner(b, rewrites=None):
+        tr, _, _ = trace_fn_step(loss_call, params, b, opt=opt,
+                                 opt_state=st, rewrites=rewrites)
+        return tr
+    runner.pair = lambda b2: trace_fn_pair(loss_call, params, b2, opt=opt,
+                                           opt_state=st)
+
+    eps = 1e-6
+    thr_fused, _ = estimate_thresholds(runner, batch, eps, seed=3)
+    est = make_pair_estimator(loss_call, opt, params, batch, eps, seed=3)
+    thr_live = est(params, st, batch, step=0)
+    assert set(thr_fused.per_tensor) == set(thr_live.per_tensor)
+    for kind, named in thr_fused.per_tensor.items():
+        assert set(named) == set(thr_live.per_tensor[kind]), kind
+        for name, est_val in named.items():
+            live = thr_live.per_tensor[kind][name]
+            assert live == pytest.approx(est_val, rel=1e-9, abs=1e-30), (
+                kind, name)
+
+
+def test_pair_estimator_token_mode_still_deterministic():
+    """Token-input path (per-row embedding-perturbation rewrite folded into
+    the shared collector): two independently built estimators agree
+    exactly, and the estimates are non-trivial."""
+    from repro.core.thresholds import make_pair_estimator
+    cfg = dataclasses.replace(get_config("gpt-paper").reduced(), n_layers=2,
+                              vocab=256, tie_embeddings=True)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 2, 16)
+    opt = AdamW(lr=1e-3)
+    st = opt.init(params)
+
+    def loss_call(p, b, ctx):
+        return m.loss(p, b, ctx=ctx)[0]
+
+    t1 = make_pair_estimator(loss_call, opt, params, batch, 1e-6,
+                             seed=1)(params, st, batch, step=2)
+    t2 = make_pair_estimator(loss_call, opt, params, batch, 1e-6,
+                             seed=1)(params, st, batch, step=2)
+    assert t1.per_tensor == t2.per_tensor
+    assert t1.per_tensor["activation"]["final_norm_out"] > 0
