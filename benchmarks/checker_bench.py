@@ -62,10 +62,18 @@ def run(json_path: str = "BENCH_checker.json") -> None:
         t_batched = timeit(
             lambda: batched_rel_err(sec_a, sec_b, mode=batched_mode),
             iters=5)
+        # the engine's auto selection (per-pair mean crossover on CPU) must
+        # track the better executor — the regression row: auto far above
+        # min(loop, batched) means the crossover rotted
+        t_auto = timeit(lambda: batched_rel_err(sec_a, sec_b), iters=5)
         emit(f"checker/loop/{label}", t_loop)
         emit(f"checker/packed/{label}", t_batched,
              derived=f"speedup={t_loop / t_batched:.2f}x "
                      f"mode={batched_mode}")
+        best = min(t_loop, t_batched)
+        emit(f"checker/auto/{label}", t_auto,
+             derived=f"vs_best={t_auto / best:.2f}x "
+                     f"({'OK' if t_auto <= 1.25 * best else 'REGRESSED'})")
     if json_path:
         write_json(json_path, rows=ROWS[first_row:])
 

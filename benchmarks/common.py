@@ -16,8 +16,14 @@ def emit(name: str, us_per_call: float, derived: str = ""):
 
 
 def write_json(path: str, rows=None):
-    """Persist emitted rows as {name: us_per_call} (BENCH_*.json contract)."""
+    """Persist emitted rows as {name: us_per_call} (BENCH_*.json contract).
+
+    A no-op under ``REPRO_BENCH_SMOKE`` (benchmarks.run --smoke): smoke
+    runs exercise every bench but must never overwrite tracked rows with
+    tiny-step numbers — enforced here so EVERY bench honors it."""
     import json
+    if os.environ.get("REPRO_BENCH_SMOKE"):
+        return
     with open(path, "w") as f:
         json.dump({name: us for name, us, _ in (rows or ROWS)}, f,
                   indent=2, sort_keys=True)

@@ -29,7 +29,15 @@ def main() -> None:
                     help="include the (slow, 512-device) roofline sweep")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON {name: us_per_call}")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-step smoke mode: exercises every selected "
+                         "bench end to end but writes NO BENCH_*.json "
+                         "(keeps the tracked rows honest) — the test "
+                         "suite's rot guard")
     args = ap.parse_args()
+    if args.smoke:
+        import os
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
     want = set(args.only.split(",")) if args.only else None
 
     def on(name):

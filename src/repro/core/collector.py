@@ -15,6 +15,7 @@ only N x 2 reduction scalars cross the device boundary.
 from __future__ import annotations
 
 from collections.abc import MutableMapping
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -23,6 +24,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.tap import TraceContext
+
+
+def device_ctx(device):
+    """``jax.default_device`` context for ``device`` (no-op when None).
+
+    Computations dispatched inside stay UNCOMMITTED on ``device`` — they run
+    there, yet downstream consumers (the differential check's reduction over
+    reference AND candidate leaves) remain free to place the consuming
+    computation wherever its other operands are committed.  This is how the
+    supervisor partitions the reference step onto its own device set without
+    ever producing a mixed-committed-device dispatch error.
+    """
+    return jax.default_device(device) if device is not None else nullcontext()
 
 
 # ---------------------------------------------------------------------------
@@ -274,7 +288,7 @@ def trace_fn_step(loss_call, params, batch, opt=None, opt_state=None,
 
 def make_trace_step(loss_call, opt, params, batch,
                     collect_act_grads: bool = True, tap_filter=None,
-                    jit: bool = True):
+                    jit: bool = True, device=None):
     """Build a trace-collecting FULL train step compiled exactly once.
 
     ``trace_train_step`` re-traces every call (fresh closures -> fresh jit
@@ -287,9 +301,15 @@ def make_trace_step(loss_call, opt, params, batch,
     The returned Trace's sections are lazily device-resident (collector
     contract) and ``trace.loss`` / ``trace.grad_norm`` are left as device
     scalars so the caller's pipeline is never forced to synchronize.
+
+    ``device`` places the step (and its probe constants) on a specific
+    device as an UNCOMMITTED default — the supervisor's disjoint
+    reference-device set, so reference and candidate steps dispatched
+    back-to-back run concurrently.
     """
     shapes, fwd_order = tap_shapes(loss_call, params, batch, None)
-    probes = _make_probes(shapes, tap_filter, collect_act_grads)
+    with device_ctx(device):
+        probes = _make_probes(shapes, tap_filter, collect_act_grads)
 
     def _step(p, st, b, pr):
         def loss_fn(pp, prr):
@@ -305,8 +325,9 @@ def make_trace_step(loss_call, opt, params, batch,
     step_c = jax.jit(_step) if jit else _step
 
     def step(p, st, b):
-        (loss, fwd, pgrads, agrads, new_p, new_st,
-         main_grads, grad_norm) = step_c(p, st, b, probes)
+        with device_ctx(device):
+            (loss, fwd, pgrads, agrads, new_p, new_st,
+             main_grads, grad_norm) = step_c(p, st, b, probes)
         tr = Trace()
         tr.loss = loss
         tr.grad_norm = grad_norm
@@ -345,7 +366,7 @@ def trace_pair_step(model, params, batch2, opt=None, opt_state=None,
 
 def make_pair_collector(loss_call, opt, params, batch, *,
                         collect_act_grads=True, tap_filter=None, jit=True,
-                        row_rewrite=None):
+                        row_rewrite=None, device=None):
     """Build-once vmapped BASE+PERTURBED pair collection — the single
     source of the stacked two-row reference run.
 
@@ -364,7 +385,8 @@ def make_pair_collector(loss_call, opt, params, batch, *,
     """
     batch_t = {k: jnp.asarray(v) for k, v in batch.items()}
     shapes, fwd_order = tap_shapes(loss_call, params, batch_t, None)
-    probes = _make_probes(shapes, tap_filter, collect_act_grads)
+    with device_ctx(device):
+        probes = _make_probes(shapes, tap_filter, collect_act_grads)
 
     def one(p, b, flag, step_k, pr):
         def loss_fn(pp, prr):
@@ -390,9 +412,10 @@ def make_pair_collector(loss_call, opt, params, batch, *,
     flags = jnp.asarray([0.0, 1.0], jnp.float32)
 
     def collect(p, st, batch2, step: int = 0) -> tuple[Trace, Trace]:
-        b2 = {k: jnp.asarray(v) for k, v in batch2.items()}
-        loss, fwd, pg, ag, mg, new_p, gn = pair_c(p, st, b2, flags,
-                                                  jnp.int32(step), probes)
+        with device_ctx(device):
+            b2 = {k: jnp.asarray(v) for k, v in batch2.items()}
+            loss, fwd, pg, ag, mg, new_p, gn = pair_c(p, st, b2, flags,
+                                                      jnp.int32(step), probes)
         pg_named = flatten_named(pg)
         mg_named = None if mg is None else flatten_named(mg)
         np_named = None if new_p is None else flatten_named(new_p)

@@ -35,12 +35,20 @@ import numpy as np
 
 from repro.kernels import relerr as K
 
-# Below this many total section elements the float64 numpy loop wins.
-# CPU: the fused jit path only pays off once bandwidth dominates dispatch
-# (~2us/pair) and per-shape-set compilation (amortized across calls).
-# TPU/GPU: keep even small sections on device — each host transfer costs
-# more than a tiny kernel.
-MIN_BATCHED_ELEMS = {"cpu": 1 << 19, "tpu": 1 << 12, "gpu": 1 << 14}
+# Below this many total section elements the float64 numpy loop wins
+# (TPU/GPU: keep even small sections on device — each host transfer costs
+# more than a tiny kernel; the CPU crossover uses the per-pair mean below).
+MIN_BATCHED_ELEMS = {"tpu": 1 << 12, "gpu": 1 << 14}
+
+# CPU crossover refinement: both executors are per-pair host loops, so the
+# crossover tracks the MEAN elements per pair, not the section total — the
+# loop pays float64 temporaries per element (2x bandwidth) but less per-pair
+# fixed cost than the BLAS scratch path.  Measured on the container's 2-core
+# host (see checker_bench's auto rows): loop wins below ~4k elements/pair at
+# every section width from 20 to 200 tensors, BLAS above.  The old
+# total-elements cutoff misclassified exactly the bench's 50x128k section
+# (721us batched vs 535us loop).
+MIN_BATCHED_MEAN_ELEMS_CPU = 1 << 12
 
 
 def _raw(section, name):
@@ -153,13 +161,17 @@ def section_sq_norms(leaves_a, leaves_b, mode: str | None = None
         return np.zeros((0, 2), np.float64)
     if mode is None:
         backend = jax.default_backend()
-        total = sum(int(np.prod(x.shape)) for x in leaves_a)
-        if total < MIN_BATCHED_ELEMS.get(backend, 1 << 19):
+        # .size, not np.prod(shape): the selection runs per check and a
+        # np.prod call per leaf costs more than the small-section reduction
+        total = sum(int(x.size) for x in leaves_a)
+        if backend == "cpu":
+            # host executors: the crossover is per-pair, not per-section
+            mode = ("loop" if total // len(leaves_a)
+                    < MIN_BATCHED_MEAN_ELEMS_CPU else "blas")
+        elif total < MIN_BATCHED_ELEMS.get(backend, 1 << 19):
             mode = "loop"
         elif backend == "tpu":
             mode = "packed"
-        elif backend == "cpu":
-            mode = "blas"
         else:
             mode = "fused"
     if mode == "loop":

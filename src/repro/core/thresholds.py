@@ -26,7 +26,7 @@ import numpy as np
 from repro.core import canonical as C
 from repro.core.collector import Trace
 from repro.core.generator import perturb
-from repro.core.relerr_engine import batched_rel_err, rel_err_np
+from repro.core.relerr_engine import rel_err_np
 
 MACHINE_EPS = {
     "float32": 2.0 ** -24,
@@ -83,12 +83,46 @@ class Thresholds:
                           floor_mult=self.floor_mult, per_tensor=per)
 
 
-def _diff_sections(t1: Trace, t2: Trace) -> dict[str, dict[str, float]]:
-    out = {}
+def diff_sections_async(t1: Trace, t2: Trace):
+    """Dispatch the per-kind pair reductions of two traces on DEVICE and
+    return ``resolve() -> {kind: {name: rel_err}}`` (with ``resolve.ready()``
+    probing the device futures).
+
+    This is the single reduction path of threshold estimation: the one-shot
+    ``estimate_thresholds`` resolves immediately, the supervised loop's
+    periodic re-estimator holds the resolve as an in-flight epoch — both see
+    bit-identical estimates because the dispatched computation is the same.
+    """
+    from repro.core.relerr_engine import _to_rel_err, sq_norms_async
+    pend = []
     for kind in (C.KIND_ACT, C.KIND_ACT_GRAD, C.KIND_PARAM_GRAD,
                  C.KIND_MAIN_GRAD, C.KIND_PARAM_POST):
-        out[kind] = batched_rel_err(t1.section(kind), t2.section(kind))
-    return out
+        s1, s2 = t1.section(kind), t2.section(kind)
+        names = [n for n in s1 if n in s2]
+        dev = sq_norms_async([s1.raw(n) for n in names],
+                             [s2.raw(n) for n in names])
+        pend.append((kind, names, dev))
+
+    def resolve() -> dict[str, dict[str, float]]:
+        out = {}
+        for kind, names, dev in pend:
+            errs = _to_rel_err(np.asarray(dev, np.float64))
+            out[kind] = {n: float(e) for n, e in zip(names, errs)}
+        return out
+
+    def ready() -> bool:
+        for _, _, dev in pend:
+            probe = getattr(dev, "is_ready", None)
+            if probe is not None and not probe():
+                return False
+        return True
+
+    resolve.ready = ready
+    return resolve
+
+
+def _diff_sections(t1: Trace, t2: Trace) -> dict[str, dict[str, float]]:
+    return diff_sections_async(t1, t2)()
 
 
 def _float_keys(batch: dict) -> list[str]:
@@ -160,9 +194,16 @@ _EMB_TAP = "embedding/output"
 
 
 def make_pair_estimator(loss_call, opt, params, batch, eps: float,
-                        margin: float = 8.0, seed: int = 0):
+                        margin: float = 8.0, seed: int = 0, device=None):
     """Build ``estimate(params, opt_state, batch) -> Thresholds`` compiled
     exactly once — the supervised loop's periodic threshold RE-estimation.
+
+    ``estimate.submit(params, opt_state, batch, step)`` is the ASYNC form:
+    it dispatches the pair collection and the per-kind reductions on device
+    (under ``device`` when given — the supervisor's reference device set)
+    and returns ``resolve() -> Thresholds`` with ``resolve.ready()``; the
+    synchronous ``estimate`` is exactly ``submit(...)()``, so overlapped
+    and lockstep re-estimation produce bit-identical thresholds.
 
     The pair collection itself is ``collector.make_pair_collector`` — the
     same build-once vmapped base+perturbed run ``trace_fn_pair`` (and with
@@ -201,12 +242,12 @@ def make_pair_estimator(loss_call, opt, params, batch, eps: float,
             return {_EMB_TAP: perturb_tap}
 
     collect = make_pair_collector(loss_call, opt, params, batch_t,
-                                  row_rewrite=row_rewrite)
+                                  row_rewrite=row_rewrite, device=device)
     if token_mode and _EMB_TAP not in collect.shapes:
         raise ValueError("no float inputs and no embedding/output tap — "
                          "cannot build a fused pair estimator")
 
-    def estimate(p, st, live_batch, step: int = 0) -> Thresholds:
+    def submit(p, st, live_batch, step: int = 0):
         if token_mode:
             b2 = {k: jnp.stack([jnp.asarray(v)] * 2)
                   for k, v in live_batch.items()}
@@ -218,7 +259,16 @@ def make_pair_estimator(loss_call, opt, params, batch, eps: float,
                         if k in float_keys else base)
                 b2[k] = jnp.stack([jnp.asarray(base), jnp.asarray(pert)])
         t0, t1 = collect(p, st, b2, step=step)
-        return Thresholds(eps=eps, margin=margin,
-                          per_tensor=_diff_sections(t0, t1))
+        pend = diff_sections_async(t0, t1)
 
+        def resolve() -> Thresholds:
+            return Thresholds(eps=eps, margin=margin, per_tensor=pend())
+
+        resolve.ready = pend.ready
+        return resolve
+
+    def estimate(p, st, live_batch, step: int = 0) -> Thresholds:
+        return submit(p, st, live_batch, step=step)()
+
+    estimate.submit = submit
     return estimate

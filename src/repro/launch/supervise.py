@@ -162,9 +162,15 @@ def main(argv=None):
                          "--batch must divide into them)")
     ap.add_argument("--sp", action="store_true")
     ap.add_argument("--zero1", action="store_true")
-    ap.add_argument("--check-every", type=int, default=1)
+    ap.add_argument("--check-every", type=int, default=1,
+                    help="online check every C-th step (0 = checking off: "
+                         "the bare lockstep loop)")
     ap.add_argument("--async-window", type=int, default=2,
                     help="in-flight online checks (0 = synchronous)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="lockstep mode: shared ref/cand devices, "
+                         "synchronous spill + re-estimation (bit-identical "
+                         "results; for A/B timing and determinism checks)")
     ap.add_argument("--reestimate-every", type=int, default=0,
                     help="re-estimate thresholds on the live batch every R "
                          "steps (0 = step-0 estimate + constant widening)")
@@ -210,6 +216,7 @@ def main(argv=None):
         async_window=args.async_window, ckpt_every=args.ckpt_every,
         reestimate_every=args.reestimate_every,
         ring_window=args.ring_window, spill=not args.no_spill,
+        overlap=not args.no_overlap,
         localize=not args.no_localize,
         stop_on_flag=not args.no_stop_on_flag,
         work_dir=args.work_dir, seed=args.seed)

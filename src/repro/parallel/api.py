@@ -104,6 +104,18 @@ class ParallelConfig:
         return "shard_map"
 
 
+def spare_host_device(pcfg: ParallelConfig):
+    """The last device OUTSIDE the candidate's placement footprint, or None.
+
+    Candidate recipes place on the first ``pcfg.n_devices`` devices (the
+    shard_map mesh, the 1F1B per-stage submeshes, device 0 for the
+    single-controller recipes), so the last device — when one is spare —
+    forms a disjoint set the supervisor's reference step can run on
+    concurrently."""
+    devs = jax.devices()
+    return devs[-1] if len(devs) > pcfg.n_devices else None
+
+
 def make_device_mesh(pcfg: ParallelConfig) -> Mesh:
     # the shard_map mesh covers the dp/cp/tp axes only — the 1F1B engine's
     # per-stage devices (the pp factor of n_devices) never join this mesh

@@ -10,19 +10,23 @@ engine runs the pipeline the way a PP framework does (paper §5, Fig 5):
   LM head on the last stage.  Tied embeddings are replicated on both ends
   and their gradients explicitly reduced across the two stages
   (Megatron-style tied-embedding all-reduce);
-* execution follows the **1F1B microbatch schedule** (``schedule_1f1b``):
-  per-stage warmup forwards, steady one-forward-one-backward, cooldown
-  backwards — with explicit stage-boundary activation/gradient
-  ``device_put`` transfers and a bounded per-stage activation stash (the
-  1F1B memory property: stage ``s`` stashes at most ``pp - s`` inputs);
+* execution follows the **1F1B microbatch schedule** (``stage_op_stream``
+  per stage: warmup forwards, steady one-forward-one-backward, cooldown
+  backwards) under **dependency-driven per-stage dispatch**: each stage's
+  jitted op launches the moment its cross-stage input's device future
+  exists — no host clock-tick linearization — with stage-boundary
+  transfers issued at PRODUCE time through the ``BoundaryTransport`` seam
+  (the one class a real-interconnect collective-permute implementation
+  replaces) and a bounded per-stage activation stash (the 1F1B memory
+  property: stage ``s`` stashes at most ``pp - s`` inputs);
 * each (stage, microbatch) op emits a rank-LOCAL trace — stage-local layer
-  names, microbatch-sized leaves — and
-  ``core.merger.merge_microbatch_traces`` reassembles the reference-shaped
-  trace (microbatch axis concatenated, names canonicalized via the same
-  ``stage_layer_table`` the staged candidate uses) BEFORE any checking;
-* per-stage gradients accumulate across microbatches on their stage device
-  and are merged into the reference-named global tree for the (once-jitted)
-  optimizer step.
+  names, microbatch-sized leaves — merged into the reference-shaped trace
+  by the build-once ``core.merger.MergePlan`` (one jitted pack per stage:
+  microbatch-axis concat + fused grad accumulation; names canonicalized
+  via the same ``stage_layer_table`` the staged candidate uses) BEFORE any
+  checking, numerically identical to ``merge_microbatch_traces``;
+* the plan's packed per-stage gradients double as the source of the
+  reference-named global tree for the (once-jitted) optimizer step.
 
 Backward ops recompute their stage's forward from the stashed boundary
 input inside ``jax.vjp`` (stage-granular activation checkpointing) — which
@@ -50,7 +54,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.collector import (Trace, _make_probes, flatten_named,
                                   unflatten_named)
-from repro.core.merger import canonical_stage_name, merge_microbatch_traces
+from repro.core.merger import MergePlan, canonical_stage_name
 from repro.core.tap import TraceContext
 from repro.models.model import block_apply
 from repro.parallel.pp import stage_division, stage_layer_table
@@ -89,35 +93,100 @@ def stage_op_stream(pp_size: int, stage: int,
     return ops
 
 
-def schedule_1f1b(pp_size: int,
-                  n_microbatches: int) -> list[tuple[str, int, int]]:
-    """Global execution order: a clock-tick merge of the per-stage 1F1B op
-    streams where an op runs as soon as its cross-stage dependency is met
-    (forward (s, m) needs forward (s-1, m); backward (s, m) needs backward
-    (s+1, m)).  Each stage advances at most one op per tick — the host
-    linearization of what per-rank processes execute concurrently."""
-    streams = [stage_op_stream(pp_size, s, n_microbatches)
-               for s in range(pp_size)]
-    ptr = [0] * pp_size
-    done_f, done_b = set(), set()
-    order: list[tuple[str, int, int]] = []
-    total = sum(len(st) for st in streams)
-    while len(order) < total:
+def walk_1f1b(streams, visit, max_per_visit: int | None = None) -> None:
+    """Dependency-driven walk of per-stage 1F1B op streams: ``visit(d, s,
+    m)`` fires as soon as the op's cross-stage dependency is met (forward
+    (s, m) needs forward (s-1, m); backward (s, m) needs backward
+    (s+1, m)), per-stage order fixed by the streams.  This is THE driver —
+    the engine dispatches through it greedily (each stage runs as far
+    ahead as its data allows) and ``schedule_1f1b`` replays it with
+    ``max_per_visit=1`` (the clock-tick linearization), so the two can
+    never drift."""
+    S = len(streams)
+    ptr = [0] * S
+    done_f: set = set()
+    done_b: set = set()
+    remaining = sum(len(st) for st in streams)
+    while remaining:
         progressed = False
-        for s in range(pp_size):
-            if ptr[s] >= len(streams[s]):
-                continue
-            d, _, m = streams[s][ptr[s]]
-            ready = (d == "F" and (s == 0 or (s - 1, m) in done_f)) or \
-                    (d == "B" and (s == pp_size - 1 or (s + 1, m) in done_b))
-            if ready:
-                order.append(streams[s][ptr[s]])
+        for s in range(S):
+            taken = 0
+            while ptr[s] < len(streams[s]) and (max_per_visit is None
+                                                or taken < max_per_visit):
+                d, _, m = streams[s][ptr[s]]
+                ready = (d == "F" and (s == 0 or (s - 1, m) in done_f)) or \
+                        (d == "B" and (s == S - 1 or (s + 1, m) in done_b))
+                if not ready:
+                    break
+                visit(d, s, m)
                 (done_f if d == "F" else done_b).add((s, m))
                 ptr[s] += 1
+                taken += 1
+                remaining -= 1
                 progressed = True
         if not progressed:       # impossible for a well-formed 1F1B stream
             raise RuntimeError("1F1B schedule deadlocked")
+
+
+def schedule_1f1b(pp_size: int,
+                  n_microbatches: int) -> list[tuple[str, int, int]]:
+    """Global execution order: the clock-tick linearization of
+    ``walk_1f1b`` (each stage advances at most one op per tick) — the host
+    serialization of what per-rank processes execute concurrently."""
+    streams = [stage_op_stream(pp_size, s, n_microbatches)
+               for s in range(pp_size)]
+    order: list[tuple[str, int, int]] = []
+    walk_1f1b(streams, lambda d, s, m: order.append((d, s, m)),
+              max_per_visit=1)
     return order
+
+
+# ---------------------------------------------------------------------------
+# Stage-boundary transport (the one-module seam for real interconnects)
+# ---------------------------------------------------------------------------
+
+class BoundaryTransport:
+    """Stage-boundary activation/gradient communication for one iteration.
+
+    The seam the engine sends/receives through — and the ONE module a real
+    interconnect implementation (ICI collective-permute on a ``(pp,)`` mesh)
+    would replace.  This host-device implementation issues the transfer at
+    **send time** (``jax.device_put`` is async), so the copy to stage ``i+1``
+    overlaps stage ``i``'s remaining compute instead of being issued only
+    when the consumer is about to run.
+
+    Buffers model per-link recv slots: ``recv`` does not consume (a stale
+    consumer may re-read an old slot — the ``pp_stale_boundary`` surface);
+    ``evict`` frees a slot once the schedule proves it dead, bounding live
+    boundary buffers at two per stage pair.
+    """
+
+    def __init__(self, places):
+        self.places = places
+        self._act: dict = {}        # (producer stage, mb) -> act on stage+1
+        self._grad: dict = {}       # (consumer stage, mb) -> grad on stage
+
+    def send_act(self, stage: int, mb: int, value) -> None:
+        """Stage ``stage``'s forward output for ``mb`` -> stage ``stage+1``
+        (transfer issued NOW, ahead of consumption)."""
+        self._act[(stage, mb)] = jax.device_put(value,
+                                                self.places[stage + 1])
+
+    def recv_act(self, stage: int, mb: int):
+        """The boundary activation stage ``stage`` produced for ``mb``, as
+        resident on stage ``stage+1`` (non-consuming read)."""
+        return self._act[(stage, mb)]
+
+    def evict_act(self, stage: int, mb: int) -> None:
+        self._act.pop((stage, mb), None)
+
+    def send_grad(self, stage: int, mb: int, value) -> None:
+        """The cotangent for stage ``stage``'s output of ``mb`` (produced by
+        stage ``stage+1``'s backward) -> stage ``stage``."""
+        self._grad[(stage, mb)] = jax.device_put(value, self.places[stage])
+
+    def recv_grad(self, stage: int, mb: int):
+        return self._grad.pop((stage, mb))
 
 
 # ---------------------------------------------------------------------------
@@ -135,7 +204,8 @@ class PP1F1BEngine:
     """
 
     def __init__(self, model, ref_params, batch, pp_size: int,
-                 n_microbatches: int, bugs=frozenset()):
+                 n_microbatches: int, bugs=frozenset(),
+                 dispatch: str = "concurrent"):
         cfg = model.cfg
         if cfg.arch_type != "dense":
             # homogeneous attn_mlp stacks only: stages with aux-producing
@@ -165,9 +235,15 @@ class PP1F1BEngine:
         self.pp, self.M = pp_size, n_microbatches
         self.mb_size = B // n_microbatches
         self.tied = cfg.tie_embeddings
+        if dispatch not in ("concurrent", "ordered"):
+            raise ValueError(f"unknown dispatch mode {dispatch!r}")
+        self.dispatch = dispatch
         self.stages = stage_division(cfg.n_layers, pp_size, self.bugs)
         self.tables = stage_tables(cfg.n_layers, pp_size, self.bugs)
+        self.streams = [stage_op_stream(pp_size, s, n_microbatches)
+                        for s in range(pp_size)]
         self.schedule = schedule_1f1b(pp_size, n_microbatches)
+        self._plan: MergePlan | None = None
         self.meshes = [Mesh(np.array(devs[s:s + 1]), ("stage",))
                        for s in range(pp_size)]
         self.places = [NamedSharding(m, P()) for m in self.meshes]
@@ -312,7 +388,15 @@ class PP1F1BEngine:
     def collect(self, params, batch, rewrites=None):
         """One full 1F1B training iteration.  Returns ``(merged_trace,
         grads_tree, merge_report)``; ``grads_tree`` is reference-named and
-        placed on the controller device for the optimizer step."""
+        placed on the controller device for the optimizer step.
+
+        Per-stage ops are dispatched dependency-driven (each stage's next
+        op launches as soon as its cross-stage input's device future
+        exists), boundary transfers are issued at produce time through the
+        ``BoundaryTransport`` seam, and the per-rank records are merged by
+        the build-once ``MergePlan`` — all of it async dispatch; the host
+        never blocks inside the iteration.
+        """
         M, S = self.M, self.pp
         mbs = self._split_batch(batch)
         mb_first = [jax.device_put(mb, self.places[0]) for mb in mbs]
@@ -324,12 +408,10 @@ class PP1F1BEngine:
         stale = "pp_stale_boundary" in self.bugs
         misorder = "pp_microbatch_order" in self.bugs
 
-        boundary = {}                  # (s, m) -> stage-s output activation
+        tp = BoundaryTransport(self.places)
         stash: list[dict] = [dict() for _ in range(S)]
-        g_down = {}                    # (s, m) -> cotangent for stage s out
         losses: list = [None] * M
-        grads: list = [None] * S
-        records = []
+        records: dict = {}             # (s, m, d) -> rank-local Trace
 
         def mb_arg(s, m):
             if s == 0:
@@ -338,86 +420,112 @@ class PP1F1BEngine:
                 return mb_last[m]
             return None
 
-        for d, s, m in self.schedule:
+        def run_op(d, s, m):
             r = rew[s][m] if rew else {}
             if d == "F":
                 if s == 0:
                     h_in = None
                 else:
-                    # stage-boundary activation recv (explicit transfer);
-                    # the stale-boundary bug reuses the previous
-                    # microbatch's recv buffer
+                    # boundary recv: the stale-boundary bug re-reads the
+                    # previous microbatch's recv slot
                     src = m - 1 if (stale and m > 0) else m
-                    h_in = jax.device_put(boundary[(s - 1, src)],
-                                          self.places[s])
+                    h_in = tp.recv_act(s - 1, src)
                 out, taps = self._fwd[s](ps[s], h_in, mb_arg(s, m), r)
                 stash[s][m] = h_in
                 if s == S - 1:
                     losses[m] = out
                 else:
-                    boundary[(s, m)] = out
+                    # transfer to stage s+1 issued NOW — it overlaps this
+                    # stage's (and every other stage's) in-flight compute
+                    tp.send_act(s, m, out)
                 if s > 0 and m > 0:
-                    # recv-buffer eviction: entry (s-1, k) feeds forward
-                    # (s, k) and — under the stale-boundary bug — forward
-                    # (s, k+1); once (s, m) ran, (s-1, m-1) is dead, so at
-                    # most two boundary buffers live per stage pair
-                    boundary.pop((s - 1, m - 1), None)
+                    # recv-slot eviction: slot (s-1, k) feeds forward (s, k)
+                    # and — under the stale-boundary bug — forward (s, k+1);
+                    # once (s, m) ran, (s-1, m-1) is dead, so at most two
+                    # slots live per stage pair
+                    tp.evict_act(s - 1, m - 1)
                 tr = Trace()
                 tr.activations = dict(taps)
                 tr.meta.update(stage=s, microbatch=m,
                                fwd_order=list(self._orders[s]))
-                records.append((s, m, tr))
             else:
                 # the microbatch-order bug misindexes the activation stash
                 # (and, on stage 0, the token microbatch it re-embeds)
                 src = m + 1 if (misorder and (m + 1) in stash[s]) else m
                 h_in = stash[s][src]
                 mb_in = mb_arg(s, src if s == 0 else m)
-                g = cot if s == S - 1 else jax.device_put(
-                    g_down.pop((s, m)), self.places[s])
+                g = cot if s == S - 1 else tp.recv_grad(s, m)
                 dh, dp, dpr = self._bwd[s](ps[s], h_in, mb_in, g, r,
                                            self._probes[s])
                 del stash[s][m]
                 if s > 0:
-                    g_down[(s - 1, m)] = dh
-                grads[s] = (dp if grads[s] is None
-                            else jax.tree.map(jnp.add, grads[s], dp))
+                    tp.send_grad(s - 1, m, dh)
                 tr = Trace()
                 tr.act_grads = dict(dpr)
                 tr.param_grads = flatten_named(dp)
                 tr.meta.update(stage=s, microbatch=m)
-                records.append((s, m, tr))
+            records[(s, m, d)] = tr
 
-        merged, report = merge_microbatch_traces(records, self.tables, M,
-                                                 place=self.home)
+        if self.dispatch == "ordered":
+            for d, s, m in self.schedule:
+                run_op(d, s, m)
+        else:
+            self._drive_concurrent(run_op)
+
+        # canonical record order (driver-independent): the MergePlan
+        # signature and the merged trace are identical either way
+        rec_list = [(s, m, records[(s, m, d)])
+                    for (s, m, d) in sorted(records,
+                                            key=lambda k: (k[0], k[1], k[2]))]
+        if self._plan is None:
+            self._plan = MergePlan.build(rec_list, self.tables, M,
+                                         place=self.home)
+        merged, report = self._plan.execute(rec_list)
+        stage_pg = self._plan.stage_param_grads
+        if stage_pg is None:           # fell back (foreign record structure)
+            stage_pg = {}
+            for (s, m, d), tr in sorted(records.items()):
+                if d != "B":
+                    continue
+                for n, g in tr.param_grads.raw_items():
+                    g = jax.device_put(g, self.home)
+                    key = (s, n)
+                    stage_pg[key] = (stage_pg[key] + g if key in stage_pg
+                                     else g)
         loss = losses[0]
         for m in range(1, M):
             loss = loss + losses[m]
         merged.loss = loss / M
         merged.meta["microbatches"] = M
         merged.meta["pp"] = S
-        return merged, self._global_grads(params, grads), report
+        return merged, self._global_grads(params, stage_pg), report
 
-    def _global_grads(self, params, grads):
-        """Per-stage accumulated grads -> reference-named global tree on the
-        controller device.  Stage-local layer indices map to the EXECUTED
-        global layers (a twice-executed layer's contributions sum, exactly
-        like autodiff on the staged candidate); never-executed layers get
-        zero grads; tied-embedding contributions from both pipeline ends
-        are summed (the explicit tied-embedding reduction)."""
+    def _drive_concurrent(self, run_op):
+        """Dependency-driven per-stage dispatch: launch each op the moment
+        its cross-stage input's device future exists — no global
+        clock-tick linearization, each stage runs as far ahead as its data
+        allows.  Per-stage op order is exactly ``stage_op_stream``, so
+        device execution (and with it every trace) is identical to the
+        ordered drive."""
+        walk_1f1b(self.streams, run_op)
+
+    def _global_grads(self, params, stage_pg):
+        """Per-stage accumulated grads ``{(stage, local name): leaf}`` (on
+        the controller, courtesy of the merge plan's packed transfer) ->
+        reference-named global tree.  Stage-local layer indices map to the
+        EXECUTED global layers (a twice-executed layer's contributions sum,
+        exactly like autodiff on the staged candidate); never-executed
+        layers get zero grads; tied-embedding contributions from both
+        pipeline ends are summed (the explicit tied-embedding reduction)."""
         named: dict = {}
-        for s in range(self.pp):
-            if grads[s] is None:
-                continue
-            start = self.stages[s][0]
-            for n, g in flatten_named(grads[s]).items():
-                if n.startswith("layers."):
-                    local, _, rest = n[len("layers."):].partition(".")
-                    tgt = f"layers.{start + int(local)}.{rest}"
-                else:
-                    tgt = n
-                g = jax.device_put(g, self.home)
-                named[tgt] = named[tgt] + g if tgt in named else g
+        for (s, n), g in stage_pg.items():
+            if n.startswith("layers."):
+                start = self.stages[s][0]
+                local, _, rest = n[len("layers."):].partition(".")
+                tgt = f"layers.{start + int(local)}.{rest}"
+            else:
+                tgt = n
+            named[tgt] = named[tgt] + g if tgt in named else g
         tpl = flatten_named(params)
         for n, v in tpl.items():
             if n not in named:

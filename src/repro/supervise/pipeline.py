@@ -46,6 +46,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass
+from typing import Any
 
 import numpy as np
 
@@ -106,6 +107,12 @@ class AsyncCheckPipeline:
         self._epochs: list[tuple[int, Thresholds, dict]] = [
             (0, thresholds, dict(SUPERVISED_KIND_MULT if kind_mult is None
                                  else kind_mult))]
+        # pending epochs whose estimate is still a device future:
+        # (from_step, resolve() -> Thresholds, kind_mult), settled lazily —
+        # a check of step >= from_step forces resolution first, so results
+        # are bit-identical to resolving at submission
+        self._pending_epochs: list[tuple[int, Any, dict]] = []
+        self.epochs_settled = 0
         self._inflight: deque = deque()
         self._clock = 0            # monotone submit/poll tick counter
         self.submitted = 0
@@ -132,7 +139,36 @@ class AsyncCheckPipeline:
         self._epochs.append((step, thr, km))
         self._epochs.sort(key=lambda e: e[0])
 
+    def schedule_epoch(self, step: int, resolve, kind_mult=None) -> None:
+        """Register a threshold epoch whose estimate is still in flight.
+
+        ``resolve() -> Thresholds`` is the estimate's resolution (host
+        transfer of the reduction scalars).  The epoch is settled — resolved,
+        union-merged onto the running thresholds, installed for checks at
+        steps >= ``step`` — lazily: either when a check at such a step needs
+        it (determinism: the check sees exactly the epoch it would have seen
+        under synchronous estimation) or at ``drain()``.  Until then the
+        estimate overlaps training compute instead of stalling the loop."""
+        km = dict(self.kind_mult if kind_mult is None else kind_mult)
+        self._pending_epochs.append((int(step), resolve, km))
+        self._pending_epochs.sort(key=lambda e: e[0])
+
+    def settle_epochs(self, step=None) -> int:
+        """Resolve pending epochs with ``from_step <= step`` (all of them
+        when ``step`` is None), in submission order."""
+        n = 0
+        while self._pending_epochs and (
+                step is None or self._pending_epochs[0][0] <= step):
+            s, resolve, km = self._pending_epochs.pop(0)
+            merged = self.thresholds.union(resolve())
+            self._epochs.append((s, merged, km))
+            self._epochs.sort(key=lambda e: e[0])
+            self.epochs_settled += 1
+            n += 1
+        return n
+
     def _epoch_for(self, step: int) -> tuple[int, Thresholds, dict]:
+        self.settle_epochs(step)
         ep = self._epochs[0]
         for e in self._epochs:
             if e[0] <= step:
@@ -193,6 +229,12 @@ class AsyncCheckPipeline:
         entries older than the window in pipeline ticks, so the pipeline
         still drains instead of deferring everything to ``drain()``."""
         self._clock += 1
+        # settle pending threshold epochs whose device reduction already
+        # finished (in order — an unready head blocks later epochs so the
+        # union sequence stays the synchronous one)
+        while self._pending_epochs and getattr(
+                self._pending_epochs[0][1], "ready", lambda: False)():
+            self.settle_epochs(self._pending_epochs[0][0])
         done = []
         while self._inflight:
             dev, born = self._inflight[0][4], self._inflight[0][5]
@@ -206,10 +248,12 @@ class AsyncCheckPipeline:
         return done
 
     def drain(self) -> list[StepCheck]:
-        """Resolve everything still in flight (end of run)."""
+        """Resolve everything still in flight (end of run), pending
+        threshold epochs included."""
         done = []
         while self._inflight:
             done.append(self._resolve())
+        self.settle_epochs()
         return done
 
     def check_sync(self, step: int, ref, cand) -> StepCheck:

@@ -1,10 +1,16 @@
-"""Lockstep multi-step supervisor: online TTrace over a whole training run.
+"""Multi-step supervisor: online TTrace over a whole training run.
 
 ``Supervisor`` threads (params, opt_state) through BOTH the single-device
 reference and the distributed candidate for N steps, using exactly one
 compiled step per side (``collector.make_trace_step`` / the recipe's
 ``CandidateStep`` — no re-tracing, no re-jitting per step), and checks
-every step online through the async pipeline:
+every step online through the async pipeline.  With ``overlap=True`` (the
+default) every non-training cost rides off the critical path: the
+reference step dispatches on a spare device concurrently with the
+candidate, spill writes run on a background thread, and threshold
+re-estimation resolves like an async check — all bit-identical to the
+lockstep path (``overlap=False``), which exists for A/B timing and the
+determinism tests:
 
     step k trains  ->  step-k reductions enqueue on device  ->  step k+1
     trains while step k's N x 2 scalars are still in flight  ->  the
@@ -110,8 +116,14 @@ class CandidateStep:
 @dataclass
 class SuperviseConfig:
     steps: int = 8
-    check_every: int = 1        # online check every C-th step
+    check_every: int = 1        # online check every C-th step; 0 = never
     async_window: int = 2       # in-flight device checks; 0 = synchronous
+    # overlap everything off the training critical path: reference step on
+    # its own (spare) device set dispatched concurrently with the
+    # candidate, background spill writes, threshold re-estimation resolved
+    # like an async check.  False = the lockstep path (same results
+    # bit-for-bit; the determinism tests pin that)
+    overlap: bool = True
     ckpt_every: int = 4         # periodic bisection checkpoints
     ckpt_keep: int = 16         # checkpoint count bound (log-spaced thinning)
     ring_window: int = 4        # live trace pairs kept in memory
@@ -213,14 +225,23 @@ class Supervisor:
         # a step's async check resolves at most async_window * check_every
         # puts after its own, and pinning happens at resolution — the ring
         # must still hold the step then, or flagged evidence is lost (the
-        # "pinned steps are never dropped" contract)
-        min_window = (self.scfg.async_window
-                      * max(self.scfg.check_every, 1) + 1)
+        # "pinned steps are never dropped" contract).  check_every = 0 runs
+        # no checks at all, so nothing constrains the ring (this used to
+        # blow the window up to async_window * check_every and keep every
+        # trace of the run live — the "checking off slower than checking
+        # on" bench anomaly)
+        if self.scfg.check_every > 0:
+            min_window = min(self.scfg.async_window
+                             * self.scfg.check_every + 1,
+                             self.scfg.steps + 1)
+        else:
+            min_window = 1
         self.ring = TraceRing(
             window=max(self.scfg.ring_window, min_window),
             spill_dir=(os.path.join(self.work_dir, "spill")
                        if self.scfg.spill else None),
-            spill_keep=self.scfg.spill_keep)
+            spill_keep=self.scfg.spill_keep,
+            background=self.scfg.overlap)
         self.candidate = candidate
         self.pipe: Optional[AsyncCheckPipeline] = None
         self._ref_step = None
@@ -229,6 +250,13 @@ class Supervisor:
         self._bad_entry = None
 
     # ---- build (thresholds + compiled steps) -------------------------------
+    def _ref_device(self):
+        """The spare device the reference step (and the live threshold
+        estimator) runs on — the device partition of the overlapped loop.
+        None (shared placement) when nothing is spare or overlap is off."""
+        from repro.parallel.api import spare_host_device
+        return spare_host_device(self.pcfg) if self.scfg.overlap else None
+
     def _build(self):
         sc = self.scfg
         batch0 = self.batch_fn(0)
@@ -255,33 +283,48 @@ class Supervisor:
             return self.model.loss(p, b, ctx=ctx)[0]
 
         t0 = time.perf_counter()
+        ref_dev = self._ref_device()
         self._ref_step = make_trace_step(loss_call, self.opt, self.params0,
-                                         batch0)
-        if sc.reestimate_every:
-            self._estimator = make_pair_estimator(
-                loss_call, self.opt, self.params0, batch0, eps, sc.margin,
-                sc.seed)
+                                         batch0, device=ref_dev)
         self._ref_state = (self.params0, self.opt.init(self.params0))
         self._cand_state = (self.candidate.params0,
                             self.candidate.opt_state0)
-        t_build = time.perf_counter() - t0
-        return thr, {"thresholds_s": t_thr, "build_s": t_build}
+        timings = {"thresholds_s": t_thr}
+        if sc.reestimate_every:
+            self._estimator = make_pair_estimator(
+                loss_call, self.opt, self.params0, batch0, eps, sc.margin,
+                sc.seed, device=ref_dev)
+            # compile (and discard) one estimate now: the first live epoch
+            # would otherwise carry seconds of jit time INSIDE the steady
+            # loop — the dominant share of the old reest_async2 overhead
+            t1 = time.perf_counter()
+            self._estimator(self._ref_state[0], self._ref_state[1], batch0)
+            timings["estimator_warmup_s"] = time.perf_counter() - t1
+        timings["build_s"] = time.perf_counter() - t0
+        return thr, timings
 
     # ---- periodic threshold re-estimation ----------------------------------
     def _reestimate(self, k: int, rp, rs, batch, res: SuperviseResult):
+        """Dispatch the live-batch pair estimate and register it as a
+        PENDING threshold epoch: the device computation overlaps the
+        training steps behind it, and the pipeline resolves it the moment a
+        check at step >= k needs the epoch (or opportunistically once the
+        reduction is ready) — bit-identical thresholds to the synchronous
+        stall, none of the stall.  From the first live estimate on, the
+        union tracks the real noise level and the constant widening
+        tightens to the re-estimated multipliers (steps before this keep
+        SUPERVISED_KIND_MULT)."""
         t0 = time.perf_counter()
-        fresh = self._estimator(rp, rs, batch, step=k)
-        merged = self.pipe.thresholds.union(fresh)
-        # from the first live estimate on, the union tracks the real noise
-        # level and the constant widening tightens to the re-estimated
-        # multipliers (steps before this keep SUPERVISED_KIND_MULT)
-        self.pipe.swap_thresholds(merged, step=k,
-                                  kind_mult=REESTIMATED_KIND_MULT)
+        resolve = self._estimator.submit(rp, rs, batch, step=k)
+        self.pipe.schedule_epoch(k, resolve,
+                                 kind_mult=REESTIMATED_KIND_MULT)
+        if not self.scfg.overlap:
+            self.pipe.settle_epochs(k)       # the lockstep path blocks here
         res.reestimations += 1
         res.timings["reestimate_s"] = (res.timings.get("reestimate_s", 0.0)
                                        + time.perf_counter() - t0)
-        self.log(f"  [supervise] step {k}: thresholds re-estimated on the "
-                 f"live batch (epoch {res.reestimations})")
+        self.log(f"  [supervise] step {k}: live-batch threshold estimate "
+                 f"dispatched (epoch {res.reestimations})")
 
     # ---- main loop ---------------------------------------------------------
     def run(self) -> SuperviseResult:
@@ -309,11 +352,15 @@ class Supervisor:
             if (sc.reestimate_every and k
                     and k % sc.reestimate_every == 0):
                 self._reestimate(k, rp, rs, batch, res)
+            # both steps dispatch back-to-back — no host barrier between
+            # them; with a spare device the reference runs on its own
+            # device set concurrently with the candidate, and the host
+            # blocks only where the pipeline consumes values
             ref_tr, rp, rs = self._ref_step(rp, rs, batch)
             cand_tr, cp, cs = cand_step(cp, cs, batch)
             res.losses.append(ref_tr.loss)
             res.cand_losses.append(cand_tr.loss)
-            if k % sc.check_every == 0:
+            if sc.check_every > 0 and k % sc.check_every == 0:
                 if sc.async_window == 0:
                     done = [self.pipe.check_sync(k, ref_tr, cand_tr)]
                 else:
@@ -327,6 +374,7 @@ class Supervisor:
         else:
             k = sc.steps
         self._absorb(self.pipe.drain(), res, flagged_steps)
+        self.ring.flush()            # background spill writes land on disk
         res.steps_run = k
         res.losses = [float(x) for x in res.losses]
         res.cand_losses = [float(x) for x in res.cand_losses]

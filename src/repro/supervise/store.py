@@ -16,11 +16,23 @@ step): pinned steps are never dropped — they are spilled on eviction even
 when unpinned spill is bounded, and never pruned from disk — so the full
 trace of every suspicious step survives an arbitrarily long run while
 memory and disk stay flat.
+
+With ``background=True`` the spill write itself (device->host transfer +
+npz serialization — the ONLY blocking work in the supervised hot loop)
+moves to a worker thread behind a bounded queue: eviction enqueues and
+returns, the writer drains while training dispatches ahead.  The queue
+bound is the backpressure (at most ``queue_max`` evicted pairs buffered
+beyond the ring), pins win every race with eviction (a step is pinnable
+while in memory, queued, or on disk — never silently lost in between),
+and ``flush()`` joins the queue (re-raising any writer error) so diagnosis
+and end-of-run introspection see a complete disk state.
 """
 from __future__ import annotations
 
 import os
+import queue
 import shutil
+import threading
 from collections import OrderedDict
 
 import numpy as np
@@ -30,13 +42,15 @@ from repro.core.collector import _SECTION_FIELDS, Trace
 
 
 def save_trace(path: str, tr: Trace, *, step: int = 0) -> None:
-    """Spill one trace as a sharded-npz manifest checkpoint."""
+    """Spill one trace as a manifest checkpoint (raw binary shards: same
+    manifest/loader as the npz checkpoints, ~3x less serialization CPU —
+    the spill writer shares cores with training)."""
     tree = {f: {name: np.asarray(leaf)
                 for name, leaf in getattr(tr, f).raw_items()}
             for f in _SECTION_FIELDS}
     extra = {"loss": float(tr.loss), "grad_norm": float(tr.grad_norm),
              "fwd_order": list(tr.meta.get("fwd_order", []))}
-    save_checkpoint(path, tree, step=step, extra=extra)
+    save_checkpoint(path, tree, step=step, extra=extra, container="raw")
 
 
 def load_trace(path: str) -> Trace:
@@ -57,34 +71,53 @@ def load_trace(path: str) -> Trace:
 
 
 class TraceRing:
-    """Bounded ring of per-step (reference, candidate) trace pairs."""
+    """Bounded ring of per-step (reference, candidate) trace pairs.
+
+    ``background=True`` moves spill writes onto a worker thread behind a
+    bounded queue (``queue_max`` evicted pairs); ``flush()`` blocks until
+    the queue drains.  All bookkeeping is lock-protected, so pins race
+    safely against eviction and the writer.
+    """
 
     def __init__(self, window: int = 4, spill_dir: str | None = None,
-                 spill_keep: int = 8):
+                 spill_keep: int = 8, background: bool = False,
+                 queue_max: int = 4):
         self.window = max(1, int(window))
         self.spill_dir = spill_dir
         self.spill_keep = max(0, int(spill_keep))
         self._mem: OrderedDict[int, tuple[Trace, Trace]] = OrderedDict()
+        self._queued: OrderedDict[int, tuple[Trace, Trace]] = OrderedDict()
         self._spilled: OrderedDict[int, str] = OrderedDict()
         self._pinned: set[int] = set()
+        self._lock = threading.Lock()
+        self._queue: queue.Queue | None = None
+        self._writer: threading.Thread | None = None
+        self._writer_error: BaseException | None = None
+        self.background = bool(background) and spill_dir is not None
+        self.queue_max = max(1, int(queue_max))
         self.spill_count = 0
         self.drop_count = 0
 
     # ---- introspection -----------------------------------------------------
     @property
     def in_memory(self) -> list[int]:
-        return list(self._mem)
+        with self._lock:
+            return list(self._mem)
 
     @property
     def on_disk(self) -> list[int]:
-        return list(self._spilled)
+        with self._lock:
+            return list(self._spilled)
 
     @property
     def pinned(self) -> set[int]:
-        return set(self._pinned)
+        with self._lock:
+            return set(self._pinned)
 
     def __contains__(self, step: int) -> bool:
-        return step in self._mem or step in self._spilled
+        with self._lock:
+            return (step in self._mem or step in self._queued
+                    or step in self._spilled)
 
     # ---- ring --------------------------------------------------------------
     def put(self, step: int, ref: Trace, cand: Trace) -> None:
@@ -93,21 +126,42 @@ class TraceRing:
 
     def pin(self, step: int) -> bool:
         """Mark a step as evidence (never dropped).  False if the step was
-        already evicted without spill — nothing left to preserve."""
-        if step not in self._mem and step not in self._spilled:
-            return False
-        self._pinned.add(step)
-        return True
+        already evicted without spill — nothing left to preserve.  The pin
+        wins races with eviction: a step still in memory, in the writer
+        queue, or on disk is preserved wherever it currently lives."""
+        with self._lock:
+            if (step not in self._mem and step not in self._queued
+                    and step not in self._spilled):
+                return False
+            self._pinned.add(step)
+            return True
 
     def get(self, step: int) -> tuple[Trace, Trace]:
-        if step in self._mem:
-            return self._mem[step]
-        if step in self._spilled:
-            root = self._spilled[step]
-            return (load_trace(os.path.join(root, "ref")),
-                    load_trace(os.path.join(root, "cand")))
+        with self._lock:
+            if step in self._mem:
+                return self._mem[step]
+            if step in self._queued:        # evicted, write still pending
+                return self._queued[step]
+            root = self._spilled.get(step)
+        if root is not None:
+            try:
+                return (load_trace(os.path.join(root, "ref")),
+                        load_trace(os.path.join(root, "cand")))
+            except FileNotFoundError:
+                # lost the race with the writer's disk pruning of an
+                # unpinned step — same verdict as never having kept it
+                pass
         raise KeyError(f"step {step} not retained (window={self.window}, "
                        f"spill={'on' if self.spill_dir else 'off'})")
+
+    def flush(self) -> None:
+        """Block until every queued spill write has landed on disk (no-op
+        without a background writer); re-raises a failed writer's error."""
+        if self._queue is not None:
+            self._queue.join()
+        if self._writer_error is not None:
+            err, self._writer_error = self._writer_error, None
+            raise err
 
     def _evict(self) -> None:
         if self.spill_dir is not None:
@@ -115,27 +169,75 @@ class TraceRing:
             # included (the disk copy is the durable one)
             while len(self._mem) > self.window:
                 step, (ref, cand) = self._mem.popitem(last=False)
-                self._spill(step, ref, cand)
+                if self.background:
+                    self._enqueue(step, ref, cand)
+                else:
+                    self._spill(step, ref, cand)
+                    self._prune_disk()
         else:
             # no spill backing: pinned evidence stays live and does not
             # count against the window; oldest unpinned steps drop
-            unpinned = [s for s in self._mem if s not in self._pinned]
-            while len(unpinned) > self.window:
-                del self._mem[unpinned.pop(0)]
-                self.drop_count += 1
-        self._prune_disk()
+            with self._lock:
+                unpinned = [s for s in self._mem if s not in self._pinned]
+                while len(unpinned) > self.window:
+                    del self._mem[unpinned.pop(0)]
+                    self.drop_count += 1
+
+    # ---- background writer -------------------------------------------------
+    def _enqueue(self, step: int, ref: Trace, cand: Trace) -> None:
+        if self._queue is None:
+            self._queue = queue.Queue(maxsize=self.queue_max)
+            self._writer = threading.Thread(target=self._write_loop,
+                                            name="trace-spill-writer",
+                                            daemon=True)
+            self._writer.start()
+        with self._lock:
+            self._queued[step] = (ref, cand)
+        # bounded queue: when the writer falls behind, this blocks — the
+        # explicit backpressure that keeps evicted-but-unwritten traces
+        # O(queue_max) instead of unbounded
+        self._queue.put(step)
+
+    def _write_loop(self) -> None:
+        while True:
+            step = self._queue.get()
+            try:
+                with self._lock:
+                    pair = self._queued.get(step)
+                if pair is not None:
+                    self._spill(step, *pair)
+                    with self._lock:
+                        self._queued.pop(step, None)
+                    self._prune_disk()
+            except BaseException as e:
+                # drop the unwritable pair (memory must stay flat even
+                # when the disk is sick) and keep the FIRST error for the
+                # next flush() — later failures usually echo the same
+                # root cause
+                with self._lock:
+                    self._queued.pop(step, None)
+                    self.drop_count += 1
+                if self._writer_error is None:
+                    self._writer_error = e
+            finally:
+                self._queue.task_done()
 
     def _spill(self, step: int, ref: Trace, cand: Trace) -> None:
         root = os.path.join(self.spill_dir, f"step_{step:06d}")
         save_trace(os.path.join(root, "ref"), ref, step=step)
         save_trace(os.path.join(root, "cand"), cand, step=step)
-        self._spilled[step] = root
-        self.spill_count += 1
+        with self._lock:
+            self._spilled[step] = root
+            self.spill_count += 1
 
     def _prune_disk(self) -> None:
         if self.spill_dir is None:
             return
-        unpinned = [s for s in self._spilled if s not in self._pinned]
-        while len(unpinned) > self.spill_keep:
-            s = unpinned.pop(0)
-            shutil.rmtree(self._spilled.pop(s), ignore_errors=True)
+        with self._lock:
+            unpinned = [s for s in self._spilled if s not in self._pinned]
+            doomed = []
+            while len(unpinned) > self.spill_keep:
+                s = unpinned.pop(0)
+                doomed.append(self._spilled.pop(s))
+        for root in doomed:
+            shutil.rmtree(root, ignore_errors=True)

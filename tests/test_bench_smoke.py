@@ -1,0 +1,36 @@
+"""Bench rot guard: the supervisor bench must stay runnable end to end.
+
+BENCH_*.json rows are tracked artifacts; nothing would notice a bench
+worker crashing until the next regeneration.  This smoke test runs the
+real harness (``benchmarks/run.py --only supervisor --smoke``) with
+tiny step counts: every supervised configuration in the worker executes,
+every row is emitted, and the tracked JSON is left untouched.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_supervisor_bench_smoke_emits_every_row_and_touches_no_json():
+    json_path = os.path.join(ROOT, "BENCH_supervisor.json")
+    before = open(json_path).read() if os.path.exists(json_path) else None
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "supervisor",
+         "--smoke"],
+        capture_output=True, text=True, timeout=3000, env=env, cwd=ROOT)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    for row in ("supervisor/plain", "supervisor/nocheck", "supervisor/sync",
+                "supervisor/async2", "supervisor/async2_spill",
+                "supervisor/pp2_async2", "supervisor/pp1f1b_async2",
+                "supervisor/fp8_tile128_async2", "supervisor/reest_async2"):
+        assert row in out.stdout, (row, out.stdout)
+    assert "# all benchmarks completed" in out.stdout
+    after = open(json_path).read() if os.path.exists(json_path) else None
+    assert after == before          # smoke never rewrites tracked rows

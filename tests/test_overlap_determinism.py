@@ -1,0 +1,331 @@
+"""Overlap-everything hot loop: the overlapped paths must be bit-identical
+to the lockstep paths they replace.
+
+Three layers of pinning:
+
+* ``MergePlan`` execution == ``merge_microbatch_traces`` on randomized
+  record sets — clean grids AND the buggy structures (overlap, omission,
+  out-of-grid, cross-stage collision, tied params);
+* the 1F1B engine's dependency-driven concurrent dispatch == the ordered
+  (clock-tick) drive, trace for trace, bit for bit;
+* a supervised run with ``overlap=True`` (disjoint ref device set, async
+  spill, pending threshold epochs) == the same run with ``overlap=False``:
+  same losses, same per-tensor rel-errs and thresholds in every online
+  check, same threshold epochs, and — on a buggy run — the same first bad
+  step out of bisection.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.collector import Trace
+from repro.core.merger import MergePlan, merge_microbatch_traces
+from repro.parallel.pp1f1b import stage_tables
+
+# ---------------------------------------------------------------------------
+# MergePlan == merge_microbatch_traces (randomized structures)
+# ---------------------------------------------------------------------------
+
+
+def _rec(stage, mb, act=None, ag=None, pg=None):
+    tr = Trace()
+    if act:
+        tr.activations = act
+    if ag:
+        tr.act_grads = ag
+    if pg:
+        tr.param_grads = pg
+    return (stage, mb, tr)
+
+
+def _random_records(rng, L, pp, M):
+    """A plausible per-rank record set: per (stage, mb) one forward record
+    (acts) and one backward record (act grads + param grads), values
+    random."""
+    tables = stage_tables(L, pp)
+    recs = []
+    for s in range(pp):
+        n_local = len(tables[s])
+        for m in range(M):
+            acts = {f"layers.{i}.mlp/output":
+                    rng.standard_normal((2, 3)).astype(np.float32)
+                    for i in range(n_local)}
+            if s == 0:
+                acts["embedding/output"] = rng.standard_normal(
+                    (2, 3)).astype(np.float32)
+            pgs = {f"layers.{i}.mlp.down.w":
+                   rng.standard_normal((3, 3)).astype(np.float32)
+                   for i in range(n_local)}
+            if s in (0, pp - 1):
+                pgs["embedding.word_embeddings"] = rng.standard_normal(
+                    (4, 3)).astype(np.float32)
+            recs.append(_rec(s, m, act=acts))
+            recs.append(_rec(s, m, ag=dict(acts), pg=pgs))
+    return recs, tables
+
+
+def _assert_merge_equal(recs, tables, M):
+    m1, r1 = merge_microbatch_traces(recs, tables, M)
+    plan = MergePlan.build(recs, tables, M)
+    m2, r2 = plan.execute(recs)
+    assert plan.executions == 1 and plan.fallbacks == 0
+    for kind in ("activation", "act_grad", "param_grad"):
+        s1, s2 = m1.section(kind), m2.section(kind)
+        assert list(s1) == list(s2), kind
+        for n in s1:
+            np.testing.assert_array_equal(np.asarray(s1.raw(n)),
+                                          np.asarray(s2.raw(n)),
+                                          err_msg=f"{kind}/{n}")
+    assert (r1.ok, r1.overlap, r1.omission) == (r2.ok, r2.overlap,
+                                                r2.omission)
+    assert r1.rank_problems == r2.rank_problems
+    assert m1.meta["fwd_order"] == m2.meta["fwd_order"]
+    assert m2.meta["merge_report"] is r2
+
+
+@settings(max_examples=20, deadline=None)
+@given(L=st.integers(2, 6), pp=st.integers(2, 3), M=st.integers(1, 3),
+       mutation=st.sampled_from(["clean", "omission", "overlap",
+                                 "out_of_grid", "collision"]),
+       seed=st.integers(0, 10))
+def test_merge_plan_matches_full_merge(L, pp, M, mutation, seed):
+    rng = np.random.default_rng(seed)
+    recs, tables = _random_records(rng, L, pp, M)
+    if mutation == "omission":
+        recs = recs[:-1]                           # drop one backward record
+    elif mutation == "overlap":
+        recs = recs + [recs[0]]                    # a record contributed twice
+    elif mutation == "out_of_grid":
+        recs = recs + [_rec(pp + 3, 0, act={
+            "layers.0.mlp/output": np.ones((2, 3), np.float32)})]
+    elif mutation == "collision":
+        # a second stage claims a canonical name the first already produced
+        x = np.asarray(recs[0][2].activations["layers.0.mlp/output"])
+        bad = {"layers.0.mlp/output": x}
+        # stage 1's local layers.0 canonicalizes to a later global index;
+        # instead inject a non-layer name produced by BOTH stages
+        bad = {"final_norm_out": x}
+        recs = recs + [_rec(0, m, act=dict(bad)) for m in range(M)]
+        recs = recs + [_rec(1, m, act=dict(bad)) for m in range(M)]
+    _assert_merge_equal(recs, tables, M)
+
+
+def test_merge_plan_executes_same_structure_repeatedly_and_falls_back():
+    rng = np.random.default_rng(0)
+    recs, tables = _random_records(rng, 4, 2, 2)
+    plan = MergePlan.build(recs, tables, 2)
+    for _ in range(3):
+        merged, rep = plan.execute(recs)
+        assert rep.ok
+    assert plan.executions == 3
+    # a structurally different record set falls back to the full merge
+    merged, rep = plan.execute(recs[:-1])
+    assert plan.fallbacks == 1
+    assert not rep.ok and rep.omission          # full merge diagnosed it
+    assert plan.stage_param_grads is None       # fallback invalidates reuse
+
+
+# ---------------------------------------------------------------------------
+# concurrent vs ordered 1F1B dispatch (engine level)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_cfg(L):
+    from repro.configs.base import get_config
+    return dataclasses.replace(
+        get_config("gpt-paper").reduced(), n_layers=L, d_model=64,
+        n_heads=2, n_kv_heads=2, d_head=32, d_ff=128, vocab=128,
+        tie_embeddings=True)
+
+
+@pytest.mark.multidevice
+@pytest.mark.parametrize("bugs", [frozenset(),
+                                  frozenset(["pp_stale_boundary"]),
+                                  frozenset(["pp_microbatch_order"])])
+def test_concurrent_dispatch_bit_identical_to_ordered(forced_devices, bugs):
+    """Dependency-driven dispatch preserves per-stage op order, so every
+    trace leaf — clean or under the schedule bugs — is bit-identical to
+    the clock-tick ordered drive."""
+    import jax
+
+    from repro.core.collector import flatten_named
+    from repro.data.synthetic import make_batch
+    from repro.models.model import Model
+    from repro.parallel.pp1f1b import PP1F1BEngine
+    cfg = _tiny_cfg(4)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 4, 16)
+    tr_c, g_c, rep_c = PP1F1BEngine(m, params, batch, 2, 2, bugs).collect(
+        params, batch)
+    tr_o, g_o, rep_o = PP1F1BEngine(m, params, batch, 2, 2, bugs,
+                                    dispatch="ordered").collect(params,
+                                                                batch)
+    assert rep_c.ok == rep_o.ok
+    for kind in ("activation", "act_grad", "param_grad"):
+        s_c, s_o = tr_c.section(kind), tr_o.section(kind)
+        assert list(s_c) == list(s_o)
+        for n in s_c:
+            np.testing.assert_array_equal(np.asarray(s_c.raw(n)),
+                                          np.asarray(s_o.raw(n)),
+                                          err_msg=f"{kind}/{n}")
+    gc, go = flatten_named(g_c), flatten_named(g_o)
+    for n in gc:
+        np.testing.assert_array_equal(np.asarray(gc[n]), np.asarray(go[n]),
+                                      err_msg=n)
+    assert float(tr_c.loss) == float(tr_o.loss)
+
+
+# ---------------------------------------------------------------------------
+# overlapped vs lockstep supervised runs
+# ---------------------------------------------------------------------------
+
+
+def _small_setup():
+    import jax
+
+    from repro.models.model import Model
+    from repro.optim.adamw import AdamW
+    cfg = dataclasses.replace(_tiny_cfg(2), vocab=256)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params, AdamW(lr=1e-3)
+
+
+def _run_supervised(tmp_path, overlap, bug=None, steps=5,
+                    reestimate_every=0):
+    from repro.parallel.api import ParallelConfig
+    from repro.supervise import Supervisor, SuperviseConfig
+    cfg, model, params, opt = _small_setup()
+    pcfg = ParallelConfig(bugs=frozenset([bug] if bug else []))
+    sup = Supervisor(
+        model, cfg, pcfg, opt, params=params,
+        scfg=SuperviseConfig(steps=steps, overlap=overlap,
+                             reestimate_every=reestimate_every,
+                             stop_on_flag=bug is not None,
+                             work_dir=str(tmp_path / f"ov{int(overlap)}")),
+        batch_size=2, seq_len=16)
+    return sup, sup.run()
+
+
+def _assert_checks_identical(r1, r2):
+    assert set(r1.checks) == set(r2.checks)
+    for step in r1.checks:
+        a, b = r1.checks[step], r2.checks[step]
+        assert len(a.records) == len(b.records), step
+        for ra, rb in zip(a.records, b.records):
+            assert (ra.kind, ra.name) == (rb.kind, rb.name)
+            assert ra.rel_err == rb.rel_err, (step, ra.name)
+            assert ra.threshold == rb.threshold, (step, ra.name)
+            assert ra.flagged == rb.flagged
+        assert a.localized == b.localized
+
+
+@pytest.mark.multidevice
+def test_overlapped_clean_run_bit_identical_to_lockstep(forced_devices,
+                                                        tmp_path):
+    sup1, r1 = _run_supervised(tmp_path, overlap=True, reestimate_every=2,
+                               steps=6)
+    sup2, r2 = _run_supervised(tmp_path, overlap=False, reestimate_every=2,
+                               steps=6)
+    assert r1.passed and r2.passed
+    assert r1.losses == r2.losses
+    assert r1.cand_losses == r2.cand_losses
+    _assert_checks_identical(r1, r2)
+    # threshold epochs settle to the same schedule (pending vs immediate)
+    assert r1.reestimations == r2.reestimations == 2
+    e1, e2 = sup1.pipe._epochs, sup2.pipe._epochs
+    assert [s for s, _, _ in e1] == [s for s, _, _ in e2]
+    for (_, t1, m1), (_, t2, m2) in zip(e1, e2):
+        assert t1.per_tensor == t2.per_tensor
+        assert m1 == m2
+    # the overlapped ring spilled through the background writer, and
+    # flush() left the same disk state the synchronous writer leaves
+    assert sup1.ring.on_disk == sup2.ring.on_disk
+
+
+@pytest.mark.multidevice
+def test_overlapped_buggy_run_same_first_bad_step(forced_devices, tmp_path):
+    sup1, r1 = _run_supervised(tmp_path, overlap=True,
+                               bug="ar_stale_recompute", steps=4)
+    sup2, r2 = _run_supervised(tmp_path, overlap=False,
+                               bug="ar_stale_recompute", steps=4)
+    assert r1.flagged and r2.flagged
+    assert r1.first_flagged_step == r2.first_flagged_step
+    assert r1.first_bad_step == r2.first_bad_step == 0
+    assert r1.localized_module == r2.localized_module
+    _assert_checks_identical(r1, r2)
+
+
+# ---------------------------------------------------------------------------
+# background spill writer: pin races + flush
+# ---------------------------------------------------------------------------
+
+
+def _mk_trace(val):
+    tr = Trace()
+    tr.activations = {"m/x": np.full((4, 4), val, np.float32)}
+    tr.loss, tr.grad_norm = float(val), 1.0
+    return tr
+
+
+def test_background_ring_pins_win_eviction_races(tmp_path):
+    from repro.supervise.store import TraceRing
+    ring = TraceRing(window=2, spill_dir=str(tmp_path), spill_keep=2,
+                     background=True)
+    for k in range(10):
+        ring.put(k, _mk_trace(float(k)), _mk_trace(float(k)))
+        if k == 4:
+            # step 2 was just evicted: wherever it lives right now —
+            # memory, writer queue, or disk — the pin must stick
+            assert ring.pin(2)
+    ring.flush()
+    assert 2 in ring.on_disk                     # pinned survived pruning
+    assert len([s for s in ring.on_disk if s != 2]) <= 2
+    ref, _ = ring.get(2)
+    assert ref.loss == 2.0
+    # memory stayed flat: only the window lives in RAM after flush
+    assert ring.in_memory == [8, 9]
+
+
+def test_background_ring_get_serves_queued_steps(tmp_path):
+    from repro.supervise.store import TraceRing
+    ring = TraceRing(window=1, spill_dir=str(tmp_path), background=True)
+    ring.put(0, _mk_trace(0.0), _mk_trace(0.0))
+    ring.put(1, _mk_trace(1.0), _mk_trace(1.0))   # evicts 0 to the queue
+    ref, _ = ring.get(0)                          # wherever it currently is
+    assert ref.loss == 0.0
+    ring.flush()
+    ref, _ = ring.get(0)                          # now from disk
+    assert ref.loss == 0.0
+
+
+# ---------------------------------------------------------------------------
+# pipeline: pending threshold epochs settle deterministically
+# ---------------------------------------------------------------------------
+
+
+def test_pending_epoch_settles_before_dependent_check():
+    from repro.core import canonical as C
+    from repro.core.thresholds import Thresholds
+    from repro.supervise.pipeline import AsyncCheckPipeline
+    pipe = AsyncCheckPipeline(Thresholds(eps=2.0 ** -24), window=2)
+    fresh = Thresholds(eps=2.0 ** -24,
+                       per_tensor={C.KIND_ACT: {"m/x": 0.125}})
+    resolved = []
+
+    def resolve():
+        resolved.append(True)
+        return fresh
+
+    pipe.schedule_epoch(3, resolve)
+    assert not resolved
+    assert pipe.thresholds_for(2).per_tensor == {}      # before the epoch
+    assert not resolved                                  # ... no settle
+    thr = pipe.thresholds_for(3)                         # forces settlement
+    assert resolved and thr.per_tensor[C.KIND_ACT]["m/x"] == 0.125
+    assert pipe.epochs_settled == 1
+    pipe.drain()
+    assert pipe.epochs_settled == 1                      # nothing pending
