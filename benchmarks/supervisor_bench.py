@@ -1,5 +1,6 @@
 """Supervisor overhead benchmark: supervised steps/s vs the unsupervised
-training loop (ISSUE 5 overlap criteria: spill <= 1.5x async2, reest <=
+training loop (ISSUE 5 overlap criteria: spill <= 1.65x async2 (bound
+re-calibrated for the checksummed spill payloads), reest <=
 1.3x async2, the 1F1B engine at parity with the staged pp candidate, and
 an HONEST nocheck baseline — the old row was inflated by a ring-window
 harness bug that retained every trace of the run).
@@ -23,7 +24,10 @@ Writes ``BENCH_supervisor.json`` mapping row name -> microseconds per step:
 * ``supervisor/fp8_tile128_async2`` — the FP8 tile128 candidate under BF16
   thresholds;
 * ``supervisor/reest_async2`` — dense async loop with periodic threshold
-  re-estimation on the live batch.
+  re-estimation on the live batch;
+* ``supervisor/journal``      — the async2 loop with the fsync'd
+  supervision journal on (the fault-tolerance tax; acceptance bounds it
+  at <= 5% of supervised ms/step).
 """
 from __future__ import annotations
 
@@ -67,6 +71,10 @@ def run(json_path: str = "BENCH_supervisor.json"):
          f"{sync_s / async_s:.2f}x faster than sync")
     emit("supervisor/async2_spill", spill_s * 1e6,
          f"spill ring cost {(spill_s - async_s) * 1e3:+.1f} ms/step")
+    journal_s = float(kv["journal_s_per_step"])
+    emit("supervisor/journal", journal_s * 1e6,
+         f"fsync'd journal on: {(journal_s / async_s - 1) * 100:+.1f}% "
+         f"vs async2")
     pp_s = float(kv["pp_s_per_step"])
     pp1f1b_s = float(kv["pp1f1b_s_per_step"])
     fp8_s = float(kv["fp8_s_per_step"])
@@ -89,15 +97,21 @@ def run(json_path: str = "BENCH_supervisor.json"):
     # 2-core host with honest baselines, sync and async are within noise of
     # each other — the async win needs devices that actually overlap — so
     # the guard is a no-worse-than bound here.)
+    # spill bound re-calibrated 1.5x -> 1.65x when the fault-tolerance PR
+    # added per-piece CRC32 checksums to spill payloads: corruption
+    # detection costs ~10ms/step of writer-thread CPU here (measured
+    # against the pre-checksum 1.46x), a price the resume/bisection
+    # integrity story deliberately pays
     ok = (nocheck <= 2.5 * plain                 # two traced lockstep sides
           and async_s <= 1.25 * sync_s
-          and spill_s <= 1.5 * async_s
+          and spill_s <= 1.65 * async_s
           and reest_s <= 1.3 * async_s
-          and pp1f1b_s <= 1.5 * pp_s)
+          and pp1f1b_s <= 1.5 * pp_s
+          and journal_s <= 1.05 * async_s)       # journaling tax <= 5%
     emit("supervisor/acceptance", 0.0,
          f"{'PASS' if ok else 'FAIL'}: nocheck <= 2.5x plain, async2 <= "
-         f"1.25x sync, spill <= 1.5x async2, reest <= 1.3x async2, "
-         f"pp1f1b <= 1.5x staged pp")
+         f"1.25x sync, spill <= 1.65x async2 (checksummed), reest <= "
+         f"1.3x async2, pp1f1b <= 1.5x staged pp, journal <= 1.05x async2")
     return kv
 
 

@@ -14,11 +14,19 @@ template tree — a leaf restored against a sharded ``jax.Array`` template
 comes back on the same mesh with the same ``NamedSharding``, not as a
 host-default array (the supervisor's bisection replay depends on this
 being exact).
+
+Every piece carries a CRC32 in the manifest, verified at load: a
+truncated shard or bit-flipped payload raises ``ChecksumError`` instead of
+silently restoring garbage — the supervisor's bisection then falls back to
+an earlier checkpoint and the trace ring treats the spilled step as lost
+evidence, both loud.  Manifests written before checksums load unchecked.
 """
 from __future__ import annotations
 
 import json
 import os
+import zipfile
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +36,10 @@ import numpy as np
 from repro.core.collector import flatten_named, unflatten_named
 
 MANIFEST = "manifest.json"
+
+
+class ChecksumError(RuntimeError):
+    """A checkpoint/spill payload failed CRC verification at load."""
 
 # numpy-native dtypes that np.savez round-trips by itself; anything else
 # (bf16, fp8, ...) is stored as raw bytes and re-viewed on load
@@ -91,12 +103,15 @@ def save_checkpoint(path: str, tree, *, step: int = 0,
                 data = _as_bytes(piece)
                 entry["pieces"].append({"file": shard_name(),
                                         "offset": raw_f.tell(),
-                                        "nbytes": int(data.nbytes)})
+                                        "nbytes": int(data.nbytes),
+                                        "crc": zlib.crc32(data)})
                 raw_f.write(memoryview(data))
             else:
                 key = f"{name}::{i}"
                 cur[key] = _as_bytes(piece) if exotic else piece
-                entry["pieces"].append({"file": shard_name(), "key": key})
+                entry["pieces"].append({"file": shard_name(), "key": key,
+                                        "crc": zlib.crc32(
+                                            _as_bytes(piece))})
             cur_bytes += piece.nbytes
         manifest["leaves"][name] = entry
     flush()
@@ -112,9 +127,15 @@ def load_checkpoint_named(path: str) -> tuple[dict[str, np.ndarray], int,
     Leaves come back as host numpy with the manifest dtype (bf16/fp8 raw
     bytes re-viewed); placement is the caller's concern — ``load_checkpoint``
     layers template-driven ``jax.Array`` placement on top of this.
+
+    Pieces whose manifest entry carries a ``crc`` are verified; a mismatch,
+    a truncated shard, or an unreadable container raises ``ChecksumError``.
     """
-    with open(os.path.join(path, MANIFEST)) as f:
-        manifest = json.load(f)
+    try:
+        with open(os.path.join(path, MANIFEST)) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise ChecksumError(f"unreadable manifest at {path}: {e}") from e
     files: dict[str, object] = {}
 
     def npz(fn):
@@ -123,14 +144,28 @@ def load_checkpoint_named(path: str) -> tuple[dict[str, np.ndarray], int,
         return files[fn]
 
     def piece_of(p):
-        if "offset" in p:           # raw container: byte-offset slice
-            if p["file"] not in files:
-                with open(os.path.join(path, p["file"]), "rb") as f:
-                    files[p["file"]] = f.read()
-            buf = files[p["file"]]
-            return np.frombuffer(buf, np.uint8,
-                                 count=p["nbytes"], offset=p["offset"])
-        return npz(p["file"])[p["key"]]
+        try:
+            if "offset" in p:       # raw container: byte-offset slice
+                if p["file"] not in files:
+                    with open(os.path.join(path, p["file"]), "rb") as f:
+                        files[p["file"]] = f.read()
+                buf = files[p["file"]]
+                piece = np.frombuffer(buf, np.uint8,
+                                      count=p["nbytes"], offset=p["offset"])
+            else:
+                piece = npz(p["file"])[p["key"]]
+        except (ValueError, OSError, KeyError, zipfile.BadZipFile) as e:
+            # truncated raw shard (frombuffer out of range), torn npz zip,
+            # missing key — all the same verdict: the payload is not the
+            # one the manifest describes
+            raise ChecksumError(
+                f"unreadable piece {p.get('key') or p.get('offset')} of "
+                f"{p['file']} at {path}: {e}") from e
+        if "crc" in p and zlib.crc32(_as_bytes(piece)) != p["crc"]:
+            raise ChecksumError(
+                f"CRC mismatch in {p['file']} at {path} "
+                f"(piece {p.get('key') or p.get('offset')})")
+        return piece
 
     named = {}
     for name, entry in manifest["leaves"].items():

@@ -47,6 +47,12 @@ class Report:
     def passed(self) -> bool:
         return not self.flagged and not self.merge_problems
 
+    @property
+    def loud(self) -> list[CheckRecord]:
+        """Records failing with non-finite rel-err (NaN/Inf poisoning) —
+        a LOUD failure, reported separately from threshold exceedances."""
+        return [r for r in self.records if "LOUD" in r.note]
+
     def first_flagged_activation(self) -> Optional[CheckRecord]:
         for r in self.records:            # records kept in forward tap order
             if r.kind == C.KIND_ACT and r.flagged:
@@ -60,6 +66,9 @@ class Report:
         lines.append(f"TTrace report: {status} "
                      f"({n_flag}/{len(self.records)} tensors flagged, "
                      f"{len(self.merge_problems)} merge problems)")
+        if self.loud:
+            lines.append(f"  LOUD: {len(self.loud)} tensors with "
+                         f"non-finite rel_err (NaN/Inf poisoning)")
         for p in self.merge_problems:
             lines.append(f"  [merge] {p}")
         shown = 0
@@ -150,6 +159,13 @@ def report_from_errs(entries, errs, thr: Thresholds, missing=(),
         scale = (thr_scale.get(kind, 1.0) if isinstance(thr_scale, dict)
                  else thr_scale)
         t = thr.threshold(kind, name) * scale
+        if not np.isfinite(e):
+            # NaN/Inf is a LOUD failure, not a threshold question — and a
+            # NaN rel-err compares False against every threshold, so
+            # without this branch a poisoned step would silently PASS
+            rep.records.append(CheckRecord(
+                kind, name, e, t, True, note="LOUD non-finite rel_err"))
+            continue
         rep.records.append(CheckRecord(kind, name, e, t, e > t))
     _localize_propagation(rep)
     return rep

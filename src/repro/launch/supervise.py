@@ -180,7 +180,32 @@ def main(argv=None):
     ap.add_argument("--work-dir", default=None)
     ap.add_argument("--no-stop-on-flag", action="store_true")
     ap.add_argument("--no-localize", action="store_true")
+    ap.add_argument("--no-journal", action="store_true",
+                    help="skip the fsync'd supervision journal (no resume)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume a killed run from its journal; requires "
+                         "--work-dir of the interrupted run")
+    ap.add_argument("--fault", default=None,
+                    help="loud fault to inject (supervise.faults registry: "
+                         "crash, hang_check, nan_step, corrupt_spill, "
+                         "truncate_ckpt, dead_spill_writer)")
+    ap.add_argument("--fault-step", type=int, default=None,
+                    help="step the injected fault fires at")
+    ap.add_argument("--watchdog-timeout", type=float, default=60.0,
+                    help="seconds before a hung check transfer escalates "
+                         "to the sync fallback")
     args = ap.parse_args(argv)
+
+    from repro.supervise.faults import make_injector
+    try:
+        # refusal path: unknown fault, missing/negative step — never a
+        # silently ignored malformed spec
+        fault = make_injector(args.fault, args.fault_step)
+    except ValueError as e:
+        raise SystemExit(str(e))
+    if args.resume and not args.work_dir:
+        raise SystemExit("--resume needs --work-dir (the journal and "
+                         "checkpoints of the interrupted run)")
 
     import jax
     from repro.bugs.registry import BUGS
@@ -219,7 +244,9 @@ def main(argv=None):
         overlap=not args.no_overlap,
         localize=not args.no_localize,
         stop_on_flag=not args.no_stop_on_flag,
-        work_dir=args.work_dir, seed=args.seed)
+        work_dir=args.work_dir, seed=args.seed,
+        journal=not args.no_journal,
+        watchdog_timeout_s=args.watchdog_timeout)
 
     print(f"supervising {cfg.name} ({'reduced' if args.reduced else 'full'}) "
           f"over {args.steps} steps: recipe={recipe} dp={pcfg.dp} "
@@ -230,10 +257,14 @@ def main(argv=None):
           f"reestimate_every={args.reestimate_every}")
     if spec:
         print(f"injected: {spec.bug_id} [{spec.btype}] — {spec.description}")
+    if fault is not None:
+        print(f"fault armed: {fault.spec.fault_id} at step {fault.step} — "
+              f"{fault.spec.description}")
 
     sup = Supervisor(model, cfg, pcfg, opt, params=params, scfg=scfg,
-                     batch_size=args.batch, seq_len=args.seq, log_fn=print)
-    res = sup.run()
+                     batch_size=args.batch, seq_len=args.seq, log_fn=print,
+                     fault=fault)
+    res = sup.resume() if args.resume else sup.run()
     print()
     print(res.summary())
     print(f"  recipe={sup.candidate.name} eps={sup.eps:.2e}, "

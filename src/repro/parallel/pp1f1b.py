@@ -159,12 +159,27 @@ class BoundaryTransport:
     consumer may re-read an old slot — the ``pp_stale_boundary`` surface);
     ``evict`` frees a slot once the schedule proves it dead, bounding live
     boundary buffers at two per stage pair.
+
+    ``deadline_s`` (optional) bounds each recv: the consumer polls the
+    transfer future and a producer that died or hung turns into a
+    ``repro.supervise.watchdog.BoundaryTimeout`` — a loud, localized
+    failure naming the stage link — instead of an infinite stall inside
+    the schedule.  ``None`` (default) keeps the native blocking behavior.
     """
 
-    def __init__(self, places):
+    def __init__(self, places, deadline_s=None):
         self.places = places
+        self.deadline_s = deadline_s
         self._act: dict = {}        # (producer stage, mb) -> act on stage+1
         self._grad: dict = {}       # (consumer stage, mb) -> grad on stage
+
+    def _await(self, value, what: str):
+        if self.deadline_s is None:
+            return value
+        from repro.supervise.watchdog import wait_ready
+        for leaf in jax.tree_util.tree_leaves(value):
+            wait_ready(leaf, self.deadline_s, what)
+        return value
 
     def send_act(self, stage: int, mb: int, value) -> None:
         """Stage ``stage``'s forward output for ``mb`` -> stage ``stage+1``
@@ -175,7 +190,8 @@ class BoundaryTransport:
     def recv_act(self, stage: int, mb: int):
         """The boundary activation stage ``stage`` produced for ``mb``, as
         resident on stage ``stage+1`` (non-consuming read)."""
-        return self._act[(stage, mb)]
+        return self._await(self._act[(stage, mb)],
+                           f"boundary act {stage}->{stage + 1} mb{mb}")
 
     def evict_act(self, stage: int, mb: int) -> None:
         self._act.pop((stage, mb), None)
@@ -186,7 +202,8 @@ class BoundaryTransport:
         self._grad[(stage, mb)] = jax.device_put(value, self.places[stage])
 
     def recv_grad(self, stage: int, mb: int):
-        return self._grad.pop((stage, mb))
+        return self._await(self._grad.pop((stage, mb)),
+                           f"boundary grad {stage + 1}->{stage} mb{mb}")
 
 
 # ---------------------------------------------------------------------------
@@ -205,7 +222,8 @@ class PP1F1BEngine:
 
     def __init__(self, model, ref_params, batch, pp_size: int,
                  n_microbatches: int, bugs=frozenset(),
-                 dispatch: str = "concurrent"):
+                 dispatch: str = "concurrent",
+                 boundary_deadline_s: float | None = None):
         cfg = model.cfg
         if cfg.arch_type != "dense":
             # homogeneous attn_mlp stacks only: stages with aux-producing
@@ -238,6 +256,9 @@ class PP1F1BEngine:
         if dispatch not in ("concurrent", "ordered"):
             raise ValueError(f"unknown dispatch mode {dispatch!r}")
         self.dispatch = dispatch
+        # optional per-recv deadline on stage-boundary transfers: a dead
+        # producer becomes a loud BoundaryTimeout, not an infinite stall
+        self.boundary_deadline_s = boundary_deadline_s
         self.stages = stage_division(cfg.n_layers, pp_size, self.bugs)
         self.tables = stage_tables(cfg.n_layers, pp_size, self.bugs)
         self.streams = [stage_op_stream(pp_size, s, n_microbatches)
@@ -408,7 +429,8 @@ class PP1F1BEngine:
         stale = "pp_stale_boundary" in self.bugs
         misorder = "pp_microbatch_order" in self.bugs
 
-        tp = BoundaryTransport(self.places)
+        tp = BoundaryTransport(self.places,
+                               deadline_s=self.boundary_deadline_s)
         stash: list[dict] = [dict() for _ in range(S)]
         losses: list = [None] * M
         records: dict = {}             # (s, m, d) -> rank-local Trace

@@ -13,12 +13,30 @@ online:
 * ``store``    — spill-to-disk trace ring buffer (sharded-npz manifests);
   flagged steps are pinned, memory stays flat over long runs;
 * ``bisect``   — checkpoint bisection + sync replay to the FIRST bad step,
-  handing that step to the existing rewrite-mode localizer.
+  handing that step to the existing rewrite-mode localizer;
+* ``journal``  — append-only fsync'd per-step record; a SIGKILLed run
+  resumes from it (``Supervisor.resume``) and converges to the same
+  verdicts and first-bad-step as an uninterrupted run;
+* ``watchdog`` — timeout/retry/sync-fallback ladder around host-blocking
+  waits, plus graceful degradation of checking to sampling when the
+  pipeline saturates;
+* ``faults``   — the loud-fault injection registry (crash, hung check,
+  NaN step, corrupt spill/checkpoint, dead writer) the above is
+  evaluated against.
 """
-from repro.supervise.bisect import BisectResult, bisect_first_bad  # noqa: F401
+from repro.supervise.bisect import (  # noqa: F401
+    BisectResult, CheckpointKeeper, bisect_first_bad)
+from repro.supervise.faults import (  # noqa: F401
+    FAULTS, FaultInjector, FaultSpec, make_injector)
+from repro.supervise.journal import (  # noqa: F401
+    Journal, JournalState, journal_path)
 from repro.supervise.pipeline import (  # noqa: F401
     REESTIMATED_KIND_MULT, SUPERVISED_KIND_MULT, AsyncCheckPipeline,
     StepCheck)
 from repro.supervise.runner import (  # noqa: F401
     CandidateStep, SuperviseConfig, SuperviseResult, Supervisor)
-from repro.supervise.store import TraceRing, load_trace, save_trace  # noqa: F401
+from repro.supervise.store import (  # noqa: F401
+    BackgroundWriter, TraceRing, WriterDeath, load_trace, save_trace)
+from repro.supervise.watchdog import (  # noqa: F401
+    BoundaryTimeout, CheckTimeout, DegradationController, LoudFault,
+    Watchdog, WatchdogEvent, wait_ready)

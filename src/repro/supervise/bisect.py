@@ -37,11 +37,15 @@ isolation when the divergence is in the forward pass).
 from __future__ import annotations
 
 import os
+import shutil
+import threading
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
-from repro.checkpoint.store import load_checkpoint, save_checkpoint
+from repro.checkpoint.store import (MANIFEST, ChecksumError, load_checkpoint,
+                                    load_checkpoint_named, save_checkpoint)
 from repro.supervise.pipeline import StepCheck
+from repro.supervise.store import BackgroundWriter
 
 
 class CheckpointKeeper:
@@ -55,52 +59,130 @@ class CheckpointKeeper:
     stride, always keeping step 0 and the newest), which preserves the
     binary-search probe's O(log) bracketing at coarser granularity instead
     of growing linearly with run length.
+
+    ``background=True`` routes the serialization through a bounded-queue
+    ``BackgroundWriter`` (same machinery as the trace ring's spill path):
+    ``save`` enqueues immutable state references and returns, training
+    dispatches ahead while the writer drains.  Every read path —
+    ``load``, ``load_params_named``, ``verify`` — flushes the queue first,
+    so bisection never restores a checkpoint that is still in flight.
+    A writer failure surfaces on the next ``save()`` (and at ``flush()``),
+    after which the worker restarts.
     """
 
-    def __init__(self, root: str, keep: int = 16):
+    def __init__(self, root: str, keep: int = 16, background: bool = False,
+                 queue_max: int = 2):
         self.root = root
         self.keep = keep
         self._stride = 1
         os.makedirs(root, exist_ok=True)
         self.steps: list[int] = []
+        self._lock = threading.Lock()
+        self._writer = (BackgroundWriter("ckpt-writer", queue_max=queue_max)
+                        if background else None)
+        #: fires after a checkpoint write lands (supervisor journals it;
+        #: the fault harness corrupts payloads here)
+        self.on_save: Optional[Callable[[int, str], None]] = None
 
     def _dir(self, step: int) -> str:
         return os.path.join(self.root, f"step_{step:06d}")
 
     def save(self, step: int, ref_state, cand_state) -> None:
-        """``*_state`` are ``(params, opt_state)`` pytrees."""
+        """``*_state`` are ``(params, opt_state)`` pytrees.  jax arrays are
+        immutable, so enqueueing references is snapshot-safe — the training
+        loop rebinds new states, it never mutates these."""
+        if self._writer is not None:
+            err = self._writer.take_error()
+            if err is not None:
+                raise err
+            self._writer.submit(
+                lambda: self._write(step, ref_state, cand_state))
+        else:
+            self._write(step, ref_state, cand_state)
+
+    def _write(self, step: int, ref_state, cand_state) -> None:
         save_checkpoint(self._dir(step),
                         {"ref": {"params": ref_state[0], "opt": ref_state[1]},
                          "cand": {"params": cand_state[0],
                                   "opt": cand_state[1]}},
                         step=step)
-        if step not in self.steps:
-            self.steps.append(step)
-            self.steps.sort()
+        with self._lock:
+            if step not in self.steps:
+                self.steps.append(step)
+                self.steps.sort()
         self._prune()
+        if self.on_save is not None:
+            self.on_save(step, self._dir(step))
+
+    def flush(self) -> None:
+        """Block until every queued save landed; re-raise a writer error.
+        Called before every restore and before any bisection."""
+        if self._writer is not None:
+            self._writer.flush()
+
+    def stop(self) -> None:
+        """End the save worker thread (drains first; restarts on the next
+        ``save``) — end-of-run teardown, not a terminal state."""
+        if self._writer is not None:
+            self._writer.stop()
+
+    def verify(self, step: int) -> bool:
+        """Full CRC verification of a checkpoint (host read of every
+        piece).  The resume path uses this to trust only checkpoints that
+        survived the crash intact."""
+        self.flush()
+        try:
+            load_checkpoint_named(self._dir(step))
+            return True
+        except (ChecksumError, FileNotFoundError):
+            return False
+
+    def rescan(self) -> list[int]:
+        """Rebuild the step index from disk (the resume path: a previous
+        incarnation's checkpoints become addressable again)."""
+        found = []
+        if os.path.isdir(self.root):
+            for d in sorted(os.listdir(self.root)):
+                if d.startswith("step_") and os.path.exists(
+                        os.path.join(self.root, d, MANIFEST)):
+                    found.append(int(d[len("step_"):]))
+        with self._lock:
+            self.steps = sorted(set(self.steps) | set(found))
+        return found
+
+    def discard(self, step: int) -> None:
+        """Drop a checkpoint that failed verification (corrupt payload) so
+        bisection and resume stop considering it."""
+        with self._lock:
+            if step in self.steps:
+                self.steps.remove(step)
+        shutil.rmtree(self._dir(step), ignore_errors=True)
 
     def _prune(self) -> None:
-        import shutil
         if not self.keep:
             return
-        while len(self.steps) > self.keep:
-            self._stride *= 2
-            newest = self.steps[-1]
-            removed = False
-            for s in list(self.steps):
-                if s in (0, newest) or s % self._stride == 0:
-                    continue
-                shutil.rmtree(self._dir(s), ignore_errors=True)
-                self.steps.remove(s)
-                removed = True
-            if not removed:
-                break              # only {0, newest} left (keep < 2)
+        doomed = []
+        with self._lock:
+            while len(self.steps) > self.keep:
+                self._stride *= 2
+                newest = self.steps[-1]
+                removed = False
+                for s in list(self.steps):
+                    if s in (0, newest) or s % self._stride == 0:
+                        continue
+                    doomed.append(self._dir(s))
+                    self.steps.remove(s)
+                    removed = True
+                if not removed:
+                    break          # only {0, newest} left (keep < 2)
+        for d in doomed:
+            shutil.rmtree(d, ignore_errors=True)
 
     def load_params_named(self, step: int):
         """Host-only restore of just the two PARAM trees as flat
         ``{name: numpy}`` dicts — the cheap divergence probe's payload (no
         optimizer state, no device placement)."""
-        from repro.checkpoint.store import load_checkpoint_named
+        self.flush()
         named, _, _ = load_checkpoint_named(self._dir(step))
         ref = {k[len("ref.params."):]: v for k, v in named.items()
                if k.startswith("ref.params.")}
@@ -111,6 +193,7 @@ class CheckpointKeeper:
     def load(self, step: int, ref_template, cand_template):
         """Returns ``((ref_params, ref_opt), (cand_params, cand_opt))``,
         placed like the template trees (bit-exact values)."""
+        self.flush()
         template = {"ref": {"params": ref_template[0],
                             "opt": ref_template[1]},
                     "cand": {"params": cand_template[0],

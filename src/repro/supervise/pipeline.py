@@ -46,7 +46,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass
-from typing import Any
+from typing import Any, Callable, Optional
 
 import numpy as np
 
@@ -55,6 +55,7 @@ from repro.core.checker import (DEFAULT_KINDS, Report, collect_section_pairs,
                                 merge_problems_of, report_from_errs)
 from repro.core.relerr_engine import _to_rel_err, sq_norms_async
 from repro.core.thresholds import Thresholds
+from repro.supervise.watchdog import CheckTimeout, Watchdog
 
 SUPERVISED_KIND_MULT = {
     C.KIND_ACT: 8.0,
@@ -118,6 +119,19 @@ class AsyncCheckPipeline:
         self.submitted = 0
         self.resolved = 0
         self.max_in_flight = 0
+        # fault-tolerance hooks, all wired by the supervisor:
+        #: watchdog ladder around the resolution transfer (None = block)
+        self.watchdog: Optional[Watchdog] = None
+        #: sync recompute of a timed-out check from retained traces;
+        #: raises KeyError when the evidence is gone
+        self.fallback: Optional[Callable[[int], "StepCheck"]] = None
+        #: journal callback for every settled threshold epoch
+        self.on_epoch: Optional[Callable[[int, Thresholds, dict],
+                                         None]] = None
+        #: fault-injection tap on the submitted device future
+        self.tap_future: Optional[Callable[[int, Any], Any]] = None
+        self.rescued = 0
+        self.lost = 0
 
     # ---- threshold schedule ------------------------------------------------
     @property
@@ -164,6 +178,11 @@ class AsyncCheckPipeline:
             self._epochs.append((s, merged, km))
             self._epochs.sort(key=lambda e: e[0])
             self.epochs_settled += 1
+            if self.on_epoch is not None:
+                # a settled epoch is a durable fact: a resume must replay
+                # it (a pending estimate dies with the process and only
+                # re-running its step reproduces it)
+                self.on_epoch(s, merged, km)
             n += 1
         return n
 
@@ -206,12 +225,24 @@ class AsyncCheckPipeline:
     def in_flight(self) -> int:
         return len(self._inflight)
 
+    @property
+    def saturated(self) -> bool:
+        """True when the in-flight window is full AND its oldest entry is
+        not ready — the next submit will BLOCK on a slow/hung resolution.
+        The degradation controller's stall signal."""
+        if self.window == 0 or len(self._inflight) < self.window:
+            return False
+        ready = getattr(self._inflight[0][4], "is_ready", None)
+        return ready is not None and not ready()
+
     def submit(self, step: int, ref, cand) -> list[StepCheck]:
         """Enqueue the step-``step`` check; returns any checks that the
         backpressure bound forced to resolve (oldest first)."""
         entries, la, lb, missing = collect_section_pairs(ref, cand,
                                                          self.kinds)
         dev = sq_norms_async(la, lb)
+        if self.tap_future is not None:
+            dev = self.tap_future(step, dev)
         self._clock += 1
         self._inflight.append((step, entries, missing,
                                merge_problems_of(cand), dev, self._clock))
@@ -270,9 +301,40 @@ class AsyncCheckPipeline:
     def _resolve(self) -> StepCheck:
         step, entries, missing, merge_problems, dev, _ = \
             self._inflight.popleft()
-        errs = _to_rel_err(np.asarray(dev, np.float64))
+        try:
+            if self.watchdog is not None:
+                arr = self.watchdog.wait(
+                    lambda: np.asarray(dev, np.float64),
+                    "check transfer", step)
+            else:
+                arr = np.asarray(dev, np.float64)
+        except CheckTimeout as e:
+            self.resolved += 1
+            return self._rescue(step, str(e))
+        errs = _to_rel_err(arr)
         rep = report_from_errs(entries, errs, self.thresholds_for(step),
                                missing=missing, thr_scale=self.scales(step),
                                merge_problems=merge_problems)
         self.resolved += 1
+        return StepCheck(step, rep)
+
+    def _rescue(self, step: int, why: str) -> StepCheck:
+        """Escalation past the watchdog ladder: recompute the check
+        synchronously from retained host traces (``fallback``, wired to the
+        supervisor's trace ring).  Evidence gone too -> the check is LOST —
+        reported loudly in the step's record, run keeps progressing."""
+        if self.fallback is not None:
+            try:
+                chk = self.fallback(step)
+                self.rescued += 1
+                if self.watchdog is not None:
+                    self.watchdog.event("sync_fallback", step,
+                                        "recomputed from trace ring")
+                return chk
+            except KeyError as e:
+                why = f"{why}; fallback: {e}"
+        self.lost += 1
+        if self.watchdog is not None:
+            self.watchdog.event("check_lost", step, why)
+        rep = Report(missing=[f"check lost at step {step}: {why}"])
         return StepCheck(step, rep)

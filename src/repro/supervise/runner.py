@@ -45,6 +45,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
+from repro.checkpoint.store import ChecksumError
 from repro.core import canonical as C
 from repro.core.checker import Report, localize_with_rewrites
 from repro.core.collector import make_trace_step
@@ -57,9 +58,14 @@ from repro.parallel.api import (ParallelConfig, make_candidate_runner,
                                 make_candidate_train_step)
 from repro.supervise.bisect import (BisectResult, CheckpointKeeper,
                                     bisect_first_bad)
+from repro.supervise.faults import FaultInjector
+from repro.supervise.journal import (Journal, JournalState, journal_path,
+                                     report_to_payload, thresholds_to_payload)
 from repro.supervise.pipeline import (REESTIMATED_KIND_MULT,
                                       AsyncCheckPipeline, StepCheck)
 from repro.supervise.store import TraceRing
+from repro.supervise.watchdog import (DegradationController, Watchdog,
+                                      WatchdogEvent)
 
 
 @dataclass
@@ -137,6 +143,12 @@ class SuperviseConfig:
     stop_on_flag: bool = True   # end the run once a resolved check flags
     work_dir: Optional[str] = None   # checkpoints + spill (tmp if None)
     seed: int = 0
+    # ---- fault tolerance ---------------------------------------------------
+    journal: bool = True        # fsync'd per-step journal (resume support)
+    watchdog_timeout_s: float = 60.0  # per-wait budget on check transfers
+    watchdog_retries: int = 1   # retries before sync-fallback escalation
+    degrade_after: int = 3      # consecutive saturated checks before sampling
+    degrade_max_mult: int = 8   # cap on the effective check_every multiplier
 
 
 @dataclass
@@ -155,6 +167,14 @@ class SuperviseResult:
     cand_losses: list = field(default_factory=list)
     timings: dict = field(default_factory=dict)
     work_dir: Optional[str] = None
+    # ---- fault tolerance ---------------------------------------------------
+    resumed_from: Optional[int] = None  # journaled-resume entry step
+    loud_steps: list = field(default_factory=list)  # NaN/Inf-poisoned steps
+    degradations: list = field(default_factory=list)  # degrade/recover events
+    watchdog_events: list = field(default_factory=list)
+    checks_rescued: int = 0     # timed-out checks recomputed synchronously
+    checks_lost: int = 0        # timed-out checks whose evidence was gone
+    degraded_check_every: Optional[int] = None  # final effective cadence
 
     @property
     def passed(self) -> bool:
@@ -175,6 +195,19 @@ class SuperviseResult:
         status = "PASS" if self.passed else "FAIL"
         lines.append(f"supervised run: {status} over {self.steps_run} steps "
                      f"({len(self.checks)} checked online)")
+        if self.resumed_from is not None:
+            lines.append(f"  resumed from journaled checkpoint at step "
+                         f"{self.resumed_from}")
+        if self.loud_steps:
+            lines.append(f"  LOUD failures (NaN/Inf) at steps "
+                         f"{sorted(self.loud_steps)}")
+        if self.checks_rescued or self.checks_lost:
+            lines.append(f"  watchdog: {self.checks_rescued} checks rescued "
+                         f"by sync fallback, {self.checks_lost} lost")
+        if self.degradations:
+            lines.append(f"  degraded to sampling {len(self.degradations)}x "
+                         f"(final effective check_every: "
+                         f"{self.degraded_check_every})")
         if self.reestimations:
             lines.append(f"  thresholds re-estimated {self.reestimations}x "
                          f"on live batches")
@@ -208,7 +241,8 @@ class Supervisor:
                  batch_fn: Optional[Callable[[int], dict]] = None,
                  batch_size: int = 4, seq_len: int = 32,
                  candidate: Optional[CandidateStep] = None,
-                 log_fn: Optional[Callable[[str], None]] = None):
+                 log_fn: Optional[Callable[[str], None]] = None,
+                 fault: Optional[FaultInjector] = None):
         import jax
         self.model, self.cfg, self.pcfg, self.opt = model, cfg, pcfg, opt
         self.scfg = scfg or SuperviseConfig()
@@ -221,7 +255,9 @@ class Supervisor:
         self.work_dir = (self.scfg.work_dir
                          or tempfile.mkdtemp(prefix="ttrace_supervise_"))
         self.keeper = CheckpointKeeper(os.path.join(self.work_dir, "ckpt"),
-                                       keep=self.scfg.ckpt_keep)
+                                       keep=self.scfg.ckpt_keep,
+                                       background=self.scfg.overlap)
+        self.keeper.on_save = self._on_ckpt_saved
         # a step's async check resolves at most async_window * check_every
         # puts after its own, and pinning happens at resolution — the ring
         # must still hold the step then, or flagged evidence is lost (the
@@ -248,6 +284,56 @@ class Supervisor:
         self._ref_state = self._cand_state = None
         self._estimator = None
         self._bad_entry = None
+        # ---- fault tolerance ----------------------------------------------
+        self.fault = fault
+        self.journal: Optional[Journal] = None
+        self.watchdog = Watchdog(self.scfg.watchdog_timeout_s,
+                                 retries=self.scfg.watchdog_retries,
+                                 on_event=self._on_wd_event)
+        self.degrade = DegradationController(
+            check_every=max(1, self.scfg.check_every),
+            degrade_after=self.scfg.degrade_after,
+            max_mult=self.scfg.degrade_max_mult,
+            on_event=self._on_wd_event)
+        self.ring.on_spill = self._on_spilled
+        if fault is not None:
+            self.ring.fault_hook = fault.spill_writer
+
+    # ---- journal + watchdog plumbing ---------------------------------------
+    def _j(self, etype: str, **fields) -> None:
+        if self.journal is not None:
+            self.journal.append(etype, **fields)
+
+    def _config_dict(self) -> dict:
+        sc = self.scfg
+        return {k: getattr(sc, k) for k in JournalState.CONFIG_KEYS}
+
+    def _on_wd_event(self, ev: WatchdogEvent) -> None:
+        """Watchdog/degradation events: journaled + logged as they fire."""
+        if ev.kind in ("degrade", "recover"):
+            self._j(ev.kind, step=ev.step, detail=ev.detail)
+        else:
+            self._j("watchdog", step=ev.step, kind=ev.kind, detail=ev.detail)
+        self.log(f"  [supervise] watchdog: {ev}")
+
+    def _on_ckpt_saved(self, step: int, root: str) -> None:
+        # fires on the checkpoint writer's thread once the write landed
+        if self.fault is not None:
+            self.fault.post_ckpt(step, root)
+        self._j("ckpt", step=step)
+
+    def _on_spilled(self, step: int, root: str) -> None:
+        # fires on the spill writer's thread once both sides landed
+        if self.fault is not None:
+            self.fault.post_spill(step, root)
+        self._j("spill", step=step)
+
+    def _sync_from_ring(self, step: int) -> StepCheck:
+        """The watchdog's escalation target: recompute a timed-out check
+        synchronously from the retained host traces.  Raises ``KeyError``
+        when the ring no longer holds the step (check is then LOST)."""
+        ref_tr, cand_tr = self.ring.get(step)
+        return self.pipe.check_sync(step, ref_tr, cand_tr)
 
     # ---- build (thresholds + compiled steps) -------------------------------
     def _ref_device(self):
@@ -278,6 +364,13 @@ class Supervisor:
         self.pipe = AsyncCheckPipeline(thr, window=sc.async_window,
                                        drift_alpha=sc.drift_alpha,
                                        kind_scale=self.candidate.kind_scale)
+        self.pipe.watchdog = self.watchdog
+        self.pipe.fallback = self._sync_from_ring
+        self.pipe.on_epoch = lambda s, t, km: self._j(
+            "epoch", from_step=s, thresholds=thresholds_to_payload(t),
+            kind_mult=km, reestimated=True)
+        if self.fault is not None:
+            self.pipe.tap_future = self.fault.check_future
 
         def loss_call(p, b, ctx):
             return self.model.loss(p, b, ctx=ctx)[0]
@@ -334,57 +427,198 @@ class Supervisor:
                               first_flagged_step=None, first_bad_step=None,
                               thresholds=thr, work_dir=self.work_dir)
         res.timings = timings
-        rp, rs = self._ref_state
-        cp, cs = self._cand_state
-        cand_step = self.candidate.step
+        if sc.journal:
+            self.journal = Journal(journal_path(self.work_dir))
+            self._j("start", **self._config_dict())
+        return self._run_loop(res, start=0, flagged_steps=[],
+                              entry=(self._ref_state, self._cand_state))
+
+    def resume(self) -> SuperviseResult:
+        """Re-enter a killed supervised run from its journal + work dir.
+
+        Replays the journal to rebuild resolved verdicts and the settled
+        threshold-epoch schedule, restores both sides from the newest
+        DURABLE checkpoint consistent with that history (CRC-verified;
+        torn writes from the crash are discarded loudly), and re-enters
+        the lockstep loop there.  Determinism of the loop (stateless batch
+        generator, bit-exact restore, once-compiled steps) makes the
+        resumed run converge to the same flagged steps, rel-errs,
+        threshold epochs and first-bad-step as an uninterrupted run —
+        only per-step host losses before the resume point are NaN
+        placeholders (the journal deliberately never syncs device losses).
+        """
+        sc = self.scfg
+        if not sc.work_dir:
+            raise ValueError("resume() needs scfg.work_dir — the journal "
+                             "and checkpoints of the run to resume")
+        js = JournalState(Journal.read(journal_path(self.work_dir)))
+        mism = js.config_mismatches(self._config_dict())
+        if mism:
+            raise ValueError("refusing to resume with a drifted config "
+                             "(verdicts would silently change): "
+                             + "; ".join(mism))
+        thr, timings = self._build()
+        # durable checkpoints: on disk AND CRC-clean — a write torn by the
+        # crash is discarded here, loudly
+        self.keeper.rescan()
+        for s in list(self.keeper.steps):
+            if not self.keeper.verify(s):
+                self.watchdog.event("loud", s,
+                                    "corrupt checkpoint discarded at resume")
+                self.keeper.discard(s)
+        self.ring.rescan()
+        start = js.resume_step(self.keeper.steps)
+        res = SuperviseResult(flagged=False, steps_run=0,
+                              first_flagged_step=None, first_bad_step=None,
+                              thresholds=thr, work_dir=self.work_dir)
+        res.timings = timings
+        res.resumed_from = start
+        # install the journaled threshold schedule below the entry step;
+        # re-estimations at steps >= start re-run deterministically in the
+        # loop (their pending epochs died with the process)
+        below = js.epochs_below(start)
+        for s, thr_e, km in below:
+            self.pipe.swap_thresholds(thr_e, s, kind_mult=km)
+        res.reestimations = len(below)
+        # journaled verdicts below the entry step are final; checks at
+        # steps >= start recompute to bit-identical reports
         flagged_steps: list[int] = []
+        for s in sorted(js.verdicts):
+            if s >= start:
+                continue
+            rep = js.verdicts[s]
+            res.checks[s] = rep
+            if rep is not None:
+                if not rep.passed:
+                    flagged_steps.append(s)
+                    self.ring.pin(s)
+                if rep.loud:
+                    res.loud_steps.append(s)
+        res.losses = [float("nan")] * start
+        res.cand_losses = [float("nan")] * start
+        entry = (self._ref_state, self._cand_state)
+        if start in self.keeper.steps:
+            entry = self.keeper.load(start, self._ref_state,
+                                     self._cand_state)
+        if sc.journal:
+            self.journal = Journal(journal_path(self.work_dir))
+            self._j("resume", step=start, durable=list(self.keeper.steps))
+        self.log(f"  [supervise] resuming at step {start} "
+                 f"({len(res.checks)} journaled verdicts restored)")
+        return self._run_loop(res, start=start,
+                              flagged_steps=flagged_steps, entry=entry)
+
+    def _save_ckpt(self, k: int, ref_state, cand_state) -> None:
+        try:
+            self.keeper.save(k, ref_state, cand_state)
+        except Exception as e:        # noqa: BLE001 — surfaced + retried
+            # an earlier enqueued save failed; the writer restarted, this
+            # save re-submits — degraded checkpoint coverage is loud
+            self.watchdog.event("loud", k, f"ckpt writer: {e}")
+            self.keeper.save(k, ref_state, cand_state)
+
+    def _ring_put(self, k: int, ref_tr, cand_tr) -> None:
+        try:
+            self.ring.put(k, ref_tr, cand_tr)
+        except Exception as e:        # noqa: BLE001 — surfaced, not fatal
+            # the put itself landed in memory before the stored writer
+            # error surfaced; the worker restarts on the next eviction and
+            # only spill coverage (not training) degraded
+            self.watchdog.event("loud", k, f"spill writer: {e}")
+
+    def _run_loop(self, res: SuperviseResult, start: int,
+                  flagged_steps: list[int], entry) -> SuperviseResult:
+        # the finally matters on the crash path: a loop that dies mid-run
+        # (fault injection, a real bug) must still drain the journal's
+        # write queue before an in-process resume() reads the file, and
+        # must not leak the spill/ckpt worker threads of a finished run
+        try:
+            return self._run_loop_inner(res, start, flagged_steps, entry)
+        finally:
+            if self.journal is not None:
+                self.journal.close()
+            self.ring.stop()
+            self.keeper.stop()
+
+    def _run_loop_inner(self, res: SuperviseResult, start: int,
+                        flagged_steps: list[int], entry) -> SuperviseResult:
+        sc = self.scfg
+        timings = res.timings
+        (rp, rs), (cp, cs) = entry
+        cand_step = self.candidate.step
         t_loop = time.perf_counter()
         t_warm = None          # set once compile-bearing first steps are done
-        k = 0
-        for k in range(sc.steps):
-            if k == 2:
-                for x in res.losses + res.cand_losses:
-                    getattr(x, "block_until_ready", lambda: None)()
-                t_warm = time.perf_counter()
-            if k % sc.ckpt_every == 0:
-                self.keeper.save(k, (rp, rs), (cp, cs))
-            batch = self.batch_fn(k)
-            if (sc.reestimate_every and k
-                    and k % sc.reestimate_every == 0):
-                self._reestimate(k, rp, rs, batch, res)
-            # both steps dispatch back-to-back — no host barrier between
-            # them; with a spare device the reference runs on its own
-            # device set concurrently with the candidate, and the host
-            # blocks only where the pipeline consumes values
-            ref_tr, rp, rs = self._ref_step(rp, rs, batch)
-            cand_tr, cp, cs = cand_step(cp, cs, batch)
-            res.losses.append(ref_tr.loss)
-            res.cand_losses.append(cand_tr.loss)
-            if sc.check_every > 0 and k % sc.check_every == 0:
-                if sc.async_window == 0:
-                    done = [self.pipe.check_sync(k, ref_tr, cand_tr)]
+        k = start
+        # a resumed run whose journaled history already flagged goes
+        # straight to diagnosis (the original run stopped there too)
+        if not (flagged_steps and sc.stop_on_flag):
+            for k in range(start, sc.steps):
+                if self.fault is not None:
+                    self.fault.step_start(k)       # crash fault fires here
+                if k == start + 2:
+                    for x in res.losses + res.cand_losses:
+                        getattr(x, "block_until_ready", lambda: None)()
+                    t_warm = time.perf_counter()
+                if k % sc.ckpt_every == 0:
+                    self._save_ckpt(k, (rp, rs), (cp, cs))
+                batch = self.batch_fn(k)
+                if (sc.reestimate_every and k
+                        and k % sc.reestimate_every == 0):
+                    self._reestimate(k, rp, rs, batch, res)
+                # both steps dispatch back-to-back — no host barrier between
+                # them; with a spare device the reference runs on its own
+                # device set concurrently with the candidate, and the host
+                # blocks only where the pipeline consumes values
+                ref_tr, rp, rs = self._ref_step(rp, rs, batch)
+                cand_tr, cp, cs = cand_step(cp, cs, batch)
+                if self.fault is not None:
+                    cand_tr = self.fault.cand_trace(k, cand_tr)
+                res.losses.append(ref_tr.loss)
+                res.cand_losses.append(cand_tr.loss)
+                if (sc.check_every > 0 and sc.async_window > 0
+                        and k % sc.check_every == 0):
+                    # saturation probe feeds the degradation policy BEFORE
+                    # the cadence decision: a sick pipeline raises the
+                    # effective cadence (checking degrades to sampling)
+                    # instead of blocking the loop on every submit
+                    self.degrade.note(k, self.pipe.saturated)
+                checked = False
+                if (sc.check_every > 0
+                        and k % self.degrade.effective_check_every == 0):
+                    checked = True
+                    if sc.async_window == 0:
+                        done = [self.pipe.check_sync(k, ref_tr, cand_tr)]
+                    else:
+                        done = self.pipe.submit(k, ref_tr, cand_tr)
                 else:
-                    done = self.pipe.submit(k, ref_tr, cand_tr)
+                    done = self.pipe.poll()
+                self._j("step", step=k, checked=checked)
+                self._ring_put(k, ref_tr, cand_tr)
+                if (self._absorb(done, res, flagged_steps)
+                        and sc.stop_on_flag):
+                    k += 1
+                    break
             else:
-                done = self.pipe.poll()
-            self.ring.put(k, ref_tr, cand_tr)
-            if self._absorb(done, res, flagged_steps) and sc.stop_on_flag:
-                k += 1
-                break
-        else:
-            k = sc.steps
+                k = sc.steps
         self._absorb(self.pipe.drain(), res, flagged_steps)
-        self.ring.flush()            # background spill writes land on disk
+        try:
+            self.ring.flush()        # background spill writes land on disk
+        except Exception as e:        # noqa: BLE001 — coverage loss, loud
+            self.watchdog.event("loud", k, f"spill writer: {e}")
+        try:
+            self.keeper.flush()      # checkpoint writes are durable too
+        except Exception as e:        # noqa: BLE001 — coverage loss, loud
+            self.watchdog.event("loud", k, f"ckpt writer: {e}")
         res.steps_run = k
         res.losses = [float(x) for x in res.losses]
         res.cand_losses = [float(x) for x in res.cand_losses]
+        ran = max(res.steps_run - start, 0)
         timings["loop_s"] = time.perf_counter() - t_loop
-        timings["steps_per_s"] = res.steps_run / max(timings["loop_s"], 1e-9)
-        if t_warm is not None and res.steps_run > 2:
+        timings["steps_per_s"] = ran / max(timings["loop_s"], 1e-9)
+        if t_warm is not None and ran > 2:
             # steady-state rate: first two steps carry jit compilation
             steady_s = time.perf_counter() - t_warm
-            timings["steady_steps_per_s"] = ((res.steps_run - 2)
-                                             / max(steady_s, 1e-9))
+            timings["steady_steps_per_s"] = (ran - 2) / max(steady_s, 1e-9)
 
         if flagged_steps:
             res.flagged = True
@@ -393,6 +627,16 @@ class Supervisor:
             self._diagnose(res)
             timings["diagnose_s"] = time.perf_counter() - t0
         res.timings = timings
+        res.checks_rescued = self.pipe.rescued
+        res.checks_lost = self.pipe.lost
+        res.watchdog_events = [str(e) for e in self.watchdog.events]
+        res.degradations = [str(e) for e in self.degrade.events]
+        res.degraded_check_every = (self.degrade.effective_check_every
+                                    if self.degrade.degraded else None)
+        self._j("end", steps_run=res.steps_run, flagged=res.flagged,
+                first_bad_step=res.first_bad_step)
+        if self.journal is not None:
+            self.journal.close()
         return res
 
     def _absorb(self, done: list[StepCheck], res: SuperviseResult,
@@ -400,6 +644,16 @@ class Supervisor:
         hit = False
         for chk in done:
             res.checks[chk.step] = chk.report
+            self._j("verdict", step=chk.step,
+                    report=report_to_payload(chk.report))
+            rep = chk.report
+            if rep is not None and rep.loud:
+                if chk.step not in res.loud_steps:
+                    res.loud_steps.append(chk.step)
+                self._j("loud", step=chk.step,
+                        tensors=[r.name for r in rep.loud])
+                self.log(f"  [supervise] step {chk.step} LOUD failure "
+                         f"({len(rep.loud)} non-finite tensors)")
             if chk.flagged:
                 flagged_steps.append(chk.step)
                 if not self.ring.pin(chk.step):
@@ -418,7 +672,16 @@ class Supervisor:
         # device placement — O(log C) of these run per bisection.  The
         # threshold schedule (epoch + drift growth) is the pipeline's, so
         # the probe agrees with the online checks of that step.
-        rp, cp = self.keeper.load_params_named(ckpt_step)
+        try:
+            rp, cp = self.keeper.load_params_named(ckpt_step)
+        except (ChecksumError, FileNotFoundError) as e:
+            # corrupt payload: discard the checkpoint and answer "diverged"
+            # — the search retreats toward step 0, and ``good`` is only
+            # ever set from checkpoints that actually probed clean
+            self.watchdog.event("loud", ckpt_step,
+                                f"corrupt checkpoint probe: {e}")
+            self.keeper.discard(ckpt_step)
+            return True
         errs = batched_rel_err(rp, cp)
         return any(e > self.pipe.param_post_threshold(n, ckpt_step)
                    for n, e in errs.items())
@@ -426,9 +689,27 @@ class Supervisor:
     def _replay(self, start: int, end: int):
         """Deterministic sync-checked replay; returns the first flagged
         StepCheck and stashes the entry states + reference trace of that
-        step for localization."""
-        (rp, rs), (cp, cs) = self.keeper.load(start, self._ref_state,
-                                              self._cand_state)
+        step for localization.  A checkpoint that fails CRC at restore is
+        discarded and the replay retreats to an earlier one (ultimately
+        the in-memory initial states) — a longer replay, never a wrong
+        verdict built on corrupt state."""
+        while True:
+            try:
+                (rp, rs), (cp, cs) = self.keeper.load(start, self._ref_state,
+                                                      self._cand_state)
+                break
+            except (ChecksumError, FileNotFoundError) as e:
+                self.watchdog.event("loud", start,
+                                    f"corrupt checkpoint at replay: {e}")
+                self.keeper.discard(start)
+                earlier = [s for s in self.keeper.steps if s < start]
+                if not earlier:
+                    # _ref_state/_cand_state hold the build-time initial
+                    # states (they are only ever used as templates)
+                    (rp, rs), (cp, cs) = self._ref_state, self._cand_state
+                    start = 0
+                    break
+                start = max(earlier)
         cand_step = self.candidate.step
         self._bad_entry = None
         for k in range(start, end + 1):
@@ -436,6 +717,11 @@ class Supervisor:
             batch = self.batch_fn(k)
             ref_tr, rp, rs = self._ref_step(rp, rs, batch)
             cand_tr, cp, cs = cand_step(cp, cs, batch)
+            if self.fault is not None:
+                # an injected numeric fault is part of the run under
+                # diagnosis: the replay must reproduce it, or bisection
+                # would "lose" the verdict it is refining
+                cand_tr = self.fault.cand_trace(k, cand_tr)
             chk = self.pipe.check_sync(k, ref_tr, cand_tr)
             if chk.flagged:
                 self._bad_entry = (entry, ref_tr)
@@ -444,6 +730,11 @@ class Supervisor:
 
     def _diagnose(self, res: SuperviseResult) -> None:
         sc = self.scfg
+        try:
+            self.keeper.flush()  # in-flight saves land before bisection
+        except Exception as e:    # noqa: BLE001 — coverage loss, loud
+            self.watchdog.event("loud", res.first_flagged_step or 0,
+                                f"ckpt writer: {e}")
         res.bisection = bisect_first_bad(self.keeper.steps,
                                          res.first_flagged_step,
                                          self._params_diverged, self._replay)

@@ -28,6 +28,7 @@ def test_supervisor_bench_smoke_emits_every_row_and_touches_no_json():
     assert out.returncode == 0, out.stdout + "\n" + out.stderr
     for row in ("supervisor/plain", "supervisor/nocheck", "supervisor/sync",
                 "supervisor/async2", "supervisor/async2_spill",
+                "supervisor/journal",
                 "supervisor/pp2_async2", "supervisor/pp1f1b_async2",
                 "supervisor/fp8_tile128_async2", "supervisor/reest_async2"):
         assert row in out.stdout, (row, out.stdout)

@@ -1,0 +1,740 @@
+"""Fault tolerance: journaled resume, watchdogged checks, graceful
+degradation, checksummed payloads, and the loud-fault injection harness.
+
+Fast units cover the journal format (torn-tail / CRC-stop reads, payload
+roundtrips, the resume-step predicate), the fault-spec refusal path (CLI
+and ``make_injector``), the background writer's loud-death contract, the
+watchdog escalation ladder, the degradation controller, LOUD NaN
+classification and checkpoint checksums.  The slow lane runs the real
+supervised loop: crash/resume convergence (property-tested over the crash
+step), a flagged run resuming to the same first-bad-step, every registered
+fault injected end to end, and a true SIGKILL through the CLI.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.checkpoint.store import (MANIFEST, ChecksumError,
+                                    load_checkpoint_named, save_checkpoint)
+from repro.core import canonical as C
+from repro.core.checker import Report, report_from_errs
+from repro.core.collector import Trace
+from repro.core.thresholds import Thresholds
+from repro.supervise import (FAULTS, BackgroundWriter, BoundaryTimeout,
+                             CheckpointKeeper, CheckTimeout,
+                             DegradationController, Journal, JournalState,
+                             Watchdog, WriterDeath, journal_path,
+                             make_injector, wait_ready)
+from repro.supervise.journal import (report_from_payload, report_to_payload,
+                                     thresholds_from_payload,
+                                     thresholds_to_payload)
+from repro.supervise.store import TraceRing
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class Boom(Exception):
+    """In-process stand-in for SIGKILL: the journal fsyncs every record, so
+    an abrupt abort at the crash site is indistinguishable from the
+    signal."""
+
+
+def _boom():
+    raise Boom("injected crash")
+
+
+def _mk_trace(val: float, seed: int = 0) -> Trace:
+    rng = np.random.default_rng(seed)
+    tr = Trace()
+    base = rng.standard_normal((4, 8)).astype(np.float32)
+    tr.activations = {"m1/input": base + val, "m1/output": 2 * base + val}
+    tr.act_grads = {"m1/input": base - val}
+    tr.param_grads = {"m1.w": base * 3 + val}
+    tr.main_grads = {"m1.w": base * 3 + val}
+    tr.params_post = {"m1.w": base * 5 + val}
+    tr.loss = float(val)
+    tr.grad_norm = 1.0
+    tr.meta["fwd_order"] = ["m1/input", "m1/output"]
+    return tr
+
+
+# ---------------------------------------------------------------------------
+# journal format
+# ---------------------------------------------------------------------------
+
+def test_journal_roundtrip(tmp_path):
+    path = journal_path(str(tmp_path))
+    j = Journal(path)
+    j.append("start", steps=8, check_every=1)
+    j.append("step", step=0, checked=True)
+    j.append("verdict", step=0, report=None)
+    j.close()
+    events = Journal.read(path)
+    assert [e["t"] for e in events] == ["start", "step", "verdict"]
+    assert events[0]["steps"] == 8
+    assert events[1] == {"t": "step", "step": 0, "checked": True}
+
+
+def test_journal_append_is_thread_safe(tmp_path):
+    path = journal_path(str(tmp_path))
+    j = Journal(path, fsync=False)     # fsync off: the race, not the disk
+    threads = [threading.Thread(
+        target=lambda i=i: [j.append("step", step=i * 100 + k)
+                            for k in range(50)]) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    j.close()
+    events = Journal.read(path)
+    assert len(events) == 200          # no torn/interleaved lines
+    assert {e["step"] for e in events} == {i * 100 + k
+                                           for i in range(4)
+                                           for k in range(50)}
+
+
+def test_journal_read_stops_at_torn_tail(tmp_path):
+    path = journal_path(str(tmp_path))
+    j = Journal(path)
+    j.append("start", steps=4)
+    j.append("step", step=0)
+    j.close()
+    with open(path, "a") as f:
+        f.write('{"t":"step","step"')          # SIGKILL mid-append
+    events = Journal.read(path)
+    assert [e["t"] for e in events] == ["start", "step"]
+
+
+def test_journal_read_stops_at_crc_mismatch(tmp_path):
+    path = journal_path(str(tmp_path))
+    j = Journal(path)
+    for k in range(3):
+        j.append("step", step=k)
+    j.close()
+    lines = open(path).read().splitlines(keepends=True)
+    lines[1] = lines[1].replace('"step":1', '"step":9')   # payload rot
+    with open(path, "w") as f:
+        f.writelines(lines)
+    events = Journal.read(path)
+    # everything before the rotted record is trusted, nothing after
+    assert [e.get("step") for e in events] == [0]
+
+
+def test_report_payload_roundtrip():
+    thr = Thresholds(eps=2.0 ** -24)
+    entries = [(C.KIND_ACT, "m1/output", None),
+               (C.KIND_PARAM_GRAD, "m1.w", None)]
+    rep = report_from_errs(entries, [float("nan"), 1e-9], thr,
+                           missing=["act:x missing from candidate"])
+    back = report_from_payload(report_to_payload(rep))
+    assert [(r.kind, r.name, r.flagged, r.note) for r in back.records] \
+        == [(r.kind, r.name, r.flagged, r.note) for r in rep.records]
+    assert np.isnan(back.records[0].rel_err)
+    assert back.missing == rep.missing
+    assert back.localized == rep.localized
+    assert report_from_payload(report_to_payload(None)) is None
+
+
+def test_thresholds_payload_roundtrip():
+    thr = Thresholds(eps=2.0 ** -10, margin=4.0,
+                     per_tensor={C.KIND_ACT: {"m1/output": 3e-4}})
+    back = thresholds_from_payload(thresholds_to_payload(thr))
+    assert back.eps == thr.eps and back.margin == thr.margin
+    assert back.threshold(C.KIND_ACT, "m1/output") \
+        == thr.threshold(C.KIND_ACT, "m1/output")
+
+
+# ---------------------------------------------------------------------------
+# resume-state reconstruction
+# ---------------------------------------------------------------------------
+
+def _state(events):
+    return JournalState(events)
+
+
+def test_resume_step_requires_verdicts_below_checkpoint():
+    events = [{"t": "start", "steps": 8, "reestimate_every": 0}]
+    for k in range(6):
+        events.append({"t": "step", "step": k, "checked": True})
+    for k in range(4):
+        events.append({"t": "verdict", "step": k, "report": None})
+    js = _state(events)
+    # checkpoint 4 is durable: verdicts 0..3 journaled; 6 is not (4,5
+    # died in flight with the process)
+    assert js.resume_step([0, 2, 4, 6]) == 4
+    # drop verdict 3: even checkpoint 4 would skip a dead in-flight check
+    js2 = _state([e for e in events
+                  if not (e["t"] == "verdict" and e["step"] == 3)])
+    assert js2.resume_step([0, 2, 4, 6]) == 2
+
+
+def test_resume_step_requires_settled_epochs():
+    events = [{"t": "start", "steps": 8, "reestimate_every": 2}]
+    for k in range(6):
+        events.append({"t": "step", "step": k, "checked": False})
+    thr = thresholds_to_payload(Thresholds(eps=2.0 ** -24))
+    events.append({"t": "epoch", "from_step": 2, "thresholds": thr,
+                   "kind_mult": {}, "reestimated": True})
+    js = _state(events)
+    # the step-4 re-estimate was still pending at the kill: checkpoint 6
+    # cannot reproduce it, checkpoint 4 can (it re-runs step 4)
+    assert js.resume_step([0, 2, 4, 6]) == 4
+    assert js.reestimations == 1
+    assert [s for s, _, _ in js.epochs_below(4)] == [2]
+
+
+def test_resume_refuses_drifted_config():
+    js = _state([{"t": "start", "steps": 8, "check_every": 1,
+                  "async_window": 2, "ckpt_every": 4, "reestimate_every": 0,
+                  "seed": 0, "drift_alpha": 0.125}])
+    good = {"steps": 8, "check_every": 1, "async_window": 2, "ckpt_every": 4,
+            "reestimate_every": 0, "seed": 0, "drift_alpha": 0.125}
+    assert js.config_mismatches(good) == []
+    drifted = dict(good, check_every=2, seed=1)
+    mism = js.config_mismatches(drifted)
+    assert len(mism) == 2 and any("check_every" in m for m in mism)
+
+
+def test_flagged_below_collects_failed_verdicts():
+    thr = Thresholds(eps=2.0 ** -24)
+    bad = report_from_errs([(C.KIND_ACT, "m1/output", None)], [1.0], thr)
+    events = [{"t": "verdict", "step": 1, "report": report_to_payload(bad)},
+              {"t": "verdict", "step": 2, "report": None}]
+    js = _state(events)
+    assert js.flagged_below(5) == [1]
+    assert js.flagged_below(1) == []
+
+
+# ---------------------------------------------------------------------------
+# fault-spec refusal path (make_injector + CLI)
+# ---------------------------------------------------------------------------
+
+def test_make_injector_refusals():
+    with pytest.raises(ValueError, match="unknown fault"):
+        make_injector("segfault_everything", 3)
+    with pytest.raises(ValueError, match="needs --fault-step"):
+        make_injector("crash", None)
+    with pytest.raises(ValueError, match=">= 0"):
+        make_injector("crash", -1)
+    with pytest.raises(ValueError, match="without --fault"):
+        make_injector(None, 3)
+    assert make_injector(None, None) is None
+    inj = make_injector("nan_step", 2)
+    assert inj.spec.fault_id == "nan_step" and inj.step == 2
+
+
+@pytest.mark.parametrize("argv", [
+    ["--fault", "segfault_everything", "--fault-step", "1"],
+    ["--fault", "crash"],
+    ["--fault", "crash", "--fault-step", "-1"],
+    ["--fault-step", "3"],
+    ["--resume"],                       # resume without --work-dir
+])
+def test_cli_refuses_malformed_fault_specs(argv):
+    from repro.launch import supervise as cli
+    with pytest.raises(SystemExit) as ei:
+        cli.main(argv)
+    # argparse uses exit code 2; our refusals carry the message itself —
+    # either way the run never starts
+    assert ei.value.code not in (0, None)
+
+
+def test_every_fault_names_a_known_site():
+    sites = {"step_start", "check_future", "cand_trace", "post_spill",
+             "post_ckpt", "spill_writer"}
+    for spec in FAULTS.values():
+        assert spec.site in sites
+        assert spec.recovery        # tolerating it is part of the contract
+
+
+def test_injector_fires_exactly_at_step_unless_sticky():
+    inj = make_injector("crash", 3, crash_handler=_boom)
+    inj.step_start(2)
+    assert inj.fired == 0
+    with pytest.raises(Boom):
+        inj.step_start(3)
+    sticky = make_injector("hang_check", 2)
+    assert sticky.check_future(1, "dev") == "dev"
+    hung = sticky.check_future(4, "dev")      # sticky: every step >= 2
+    assert not hung.is_ready()
+
+
+# ---------------------------------------------------------------------------
+# background writer: loud death, restart
+# ---------------------------------------------------------------------------
+
+def _wait_for(pred, timeout_s=5.0):
+    t0 = time.monotonic()
+    while not pred():
+        if time.monotonic() - t0 > timeout_s:
+            raise AssertionError("condition not reached in time")
+        time.sleep(0.01)
+
+
+def test_background_writer_surfaces_error_and_survives():
+    w = BackgroundWriter("test-writer")
+    w.submit(lambda: (_ for _ in ()).throw(ValueError("disk full")))
+    with pytest.raises(ValueError, match="disk full"):
+        w.flush()
+    assert w.alive                  # a failing WRITE does not kill the worker
+    ran = []
+    w.submit(lambda: ran.append(1))
+    w.flush()
+    assert ran == [1] and w.failed_writes == 1
+
+
+def test_background_writer_death_flush_does_not_hang():
+    w = BackgroundWriter("test-writer", queue_max=4)
+    w.submit(lambda: (_ for _ in ()).throw(WriterDeath("killed")))
+    _wait_for(lambda: not w.alive)
+    # writes stranded behind the corpse: flush must drain, not deadlock
+    w._queue.put(lambda: None)
+    with pytest.raises(WriterDeath, match="killed"):
+        w.flush()
+    ran = []
+    w.submit(lambda: ran.append(1))     # ensure() restarts the worker
+    w.flush()
+    assert w.alive and ran == [1]
+
+
+def test_trace_ring_reraises_writer_death_on_next_put_and_restarts(tmp_path):
+    ring = TraceRing(window=1, spill_dir=str(tmp_path), background=True)
+    ring.fault_hook = lambda step: (WriterDeath(f"died spilling {step}")
+                                    if step == 0 else None)
+    ring.put(0, _mk_trace(0.0), _mk_trace(0.0))
+    ring.put(1, _mk_trace(1.0), _mk_trace(1.0))   # evicts 0 -> writer dies
+    _wait_for(lambda: ring._writer._error is not None)
+    with pytest.raises(WriterDeath):
+        ring.put(2, _mk_trace(2.0), _mk_trace(2.0))
+    # the worker restarted: later evictions spill normally
+    ring.put(3, _mk_trace(3.0), _mk_trace(3.0))
+    ring.flush()
+    assert 0 not in ring.on_disk and ring.drop_count >= 1
+    assert set(ring.on_disk) >= {1, 2}
+
+
+def test_trace_ring_reraises_writer_death_on_get(tmp_path):
+    ring = TraceRing(window=1, spill_dir=str(tmp_path), background=True)
+    ring.fault_hook = lambda step: WriterDeath("sick disk")
+    ring.put(0, _mk_trace(0.0), _mk_trace(0.0))
+    ring.put(1, _mk_trace(1.0), _mk_trace(1.0))
+    _wait_for(lambda: ring._writer._error is not None)
+    with pytest.raises(WriterDeath, match="sick disk"):
+        ring.get(1)
+
+
+def test_trace_ring_corrupt_spill_detected_at_get(tmp_path):
+    ring = TraceRing(window=1, spill_dir=str(tmp_path))
+    ring.put(0, _mk_trace(0.0), _mk_trace(0.0))
+    ring.put(1, _mk_trace(1.0), _mk_trace(1.0))   # spills 0 synchronously
+    root = os.path.join(str(tmp_path), "step_000000", "cand")
+    shard = os.path.join(root, sorted(
+        f for f in os.listdir(root) if f.startswith("shard_"))[0])
+    with open(shard, "r+b") as f:
+        f.seek(os.path.getsize(shard) // 2)
+        f.write(b"\xff\xff\xff\xff")
+    with pytest.raises(KeyError, match="corrupt"):
+        ring.get(0)
+    assert ring.corrupt_count == 1
+
+
+def test_trace_ring_rescan_rebuilds_spill_index(tmp_path):
+    ring = TraceRing(window=1, spill_dir=str(tmp_path))
+    for k in range(3):
+        ring.put(k, _mk_trace(float(k)), _mk_trace(float(k)))
+    spilled = ring.on_disk
+    assert spilled                      # steps evicted past the window
+    fresh = TraceRing(window=1, spill_dir=str(tmp_path))
+    assert fresh.rescan() == spilled    # a new incarnation can address them
+    ref, cand = fresh.get(spilled[0])
+    assert ref.loss == float(spilled[0])
+
+
+# ---------------------------------------------------------------------------
+# watchdog ladder + degradation policy
+# ---------------------------------------------------------------------------
+
+def test_watchdog_returns_value_and_propagates_errors():
+    wd = Watchdog(timeout_s=5.0, retries=0)
+    assert wd.wait(lambda: 42, "quick", 0) == 42
+    with pytest.raises(ValueError, match="inner"):
+        wd.wait(lambda: (_ for _ in ()).throw(ValueError("inner")), "err", 1)
+    assert wd.timeouts == 0
+
+
+def test_watchdog_retry_then_timeout():
+    wd = Watchdog(timeout_s=0.05, retries=1)
+    with pytest.raises(CheckTimeout, match="step 7"):
+        wd.wait(lambda: time.sleep(30), "check transfer", 7)
+    assert wd.timeouts == 2
+    assert [e.kind for e in wd.events] == ["retry", "timeout"]
+
+
+def test_watchdog_events_reach_on_event():
+    seen = []
+    wd = Watchdog(timeout_s=0.05, retries=0, on_event=seen.append)
+    with pytest.raises(CheckTimeout):
+        wd.wait(lambda: time.sleep(30), "x", 3)
+    assert [e.kind for e in seen] == ["timeout"] and seen[0].step == 3
+
+
+def test_wait_ready_passthrough_and_boundary_timeout():
+    plain = object()
+    assert wait_ready(plain, 0.01, "x") is plain        # no is_ready probe
+    assert wait_ready(None, None, "x") is None          # no deadline
+
+    class NeverReady:
+        def is_ready(self):
+            return False
+
+    with pytest.raises(BoundaryTimeout, match="act 0->1"):
+        wait_ready(NeverReady(), 0.05, "boundary act 0->1 mb0")
+
+    class ReadyLater:
+        def __init__(self):
+            self.t0 = time.monotonic()
+
+        def is_ready(self):
+            return time.monotonic() - self.t0 > 0.02
+
+    v = ReadyLater()
+    assert wait_ready(v, 5.0, "x") is v
+
+
+def test_degradation_controller_doubles_caps_and_recovers():
+    events = []
+    dc = DegradationController(check_every=2, degrade_after=2, max_mult=4,
+                               on_event=events.append)
+    dc.note(0, True)
+    assert dc.effective_check_every == 2       # one stall is not a trend
+    dc.note(2, True)
+    assert dc.effective_check_every == 4 and dc.degraded
+    dc.note(4, True)
+    dc.note(6, True)
+    assert dc.effective_check_every == 8       # capped at max_mult
+    dc.note(8, True)
+    dc.note(10, True)
+    assert dc.effective_check_every == 8
+    dc.note(12, False)
+    dc.note(14, False)
+    assert dc.effective_check_every == 4       # one rung back per streak
+    dc.note(16, False)
+    dc.note(18, False)
+    assert dc.effective_check_every == 2 and not dc.degraded
+    assert [e.kind for e in events] == ["degrade", "degrade", "recover",
+                                       "recover"]
+
+
+# ---------------------------------------------------------------------------
+# LOUD classification
+# ---------------------------------------------------------------------------
+
+def test_nan_rel_err_is_loud_failure_not_silent_pass():
+    thr = Thresholds(eps=2.0 ** -24)
+    entries = [(C.KIND_ACT, "m1/input", None),
+               (C.KIND_ACT, "m1/output", None)]
+    rep = report_from_errs(entries, [1e-9, float("nan")], thr)
+    assert not rep.passed                      # NaN > thr is False — the trap
+    loud = rep.loud
+    assert [r.name for r in loud] == ["m1/output"]
+    assert "LOUD" in loud[0].note and "LOUD" in rep.summary()
+    clean = report_from_errs(entries, [1e-9, 1e-9], thr)
+    assert clean.passed and not clean.loud
+
+
+# ---------------------------------------------------------------------------
+# checksummed payloads
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("container", ["npz", "raw"])
+def test_corrupt_checkpoint_raises_checksum_error(tmp_path, container):
+    path = str(tmp_path / container)
+    tree = {"w": np.arange(64, dtype=np.float32),
+            "b": np.ones(8, dtype=np.float32)}
+    save_checkpoint(path, tree, step=3, container=container)
+    named, step, _ = load_checkpoint_named(path)
+    assert step == 3 and np.array_equal(named["w"], tree["w"])
+    shard = os.path.join(path, sorted(
+        f for f in os.listdir(path) if f.startswith("shard_"))[0])
+    with open(shard, "r+b") as f:
+        f.seek(os.path.getsize(shard) // 2)
+        f.write(b"\x5a\x5a\x5a\x5a")
+    with pytest.raises(ChecksumError):
+        load_checkpoint_named(path)
+
+
+def test_pre_checksum_manifest_loads_unchecked(tmp_path):
+    path = str(tmp_path / "old")
+    tree = {"w": np.arange(16, dtype=np.float32)}
+    save_checkpoint(path, tree)
+    mpath = os.path.join(path, MANIFEST)
+    with open(mpath) as f:
+        man = json.load(f)
+    for entry in man["leaves"].values():
+        for piece in entry["pieces"]:
+            piece.pop("crc", None)      # a manifest written before checksums
+    with open(mpath, "w") as f:
+        json.dump(man, f)
+    named, _, _ = load_checkpoint_named(path)
+    assert np.array_equal(named["w"], tree["w"])
+
+
+def test_checkpoint_keeper_background_writer_verify_discard(tmp_path):
+    keeper = CheckpointKeeper(str(tmp_path), background=True)
+    state = ({"w": np.ones(8, np.float32)}, {"m": np.zeros(8, np.float32)})
+    for k in (0, 2, 4):
+        keeper.save(k, state, state)
+    keeper.flush()
+    assert keeper.steps == [0, 2, 4]
+    assert all(keeper.verify(s) for s in keeper.steps)
+    # rot checkpoint 2 on disk: verify is the durable-checkpoint gate
+    root = keeper._dir(2)
+    shard = os.path.join(root, sorted(
+        f for f in os.listdir(root) if f.startswith("shard_"))[0])
+    with open(shard, "r+b") as f:
+        f.truncate(os.path.getsize(shard) // 2)
+    assert not keeper.verify(2)
+    keeper.discard(2)
+    assert keeper.steps == [0, 4]
+    fresh = CheckpointKeeper(str(tmp_path))
+    assert fresh.rescan() == [0, 4]
+
+
+# ---------------------------------------------------------------------------
+# slow lane: the real supervised loop under faults
+# ---------------------------------------------------------------------------
+
+def _require_devices(n=4):
+    import jax
+    if len(jax.devices()) < n:
+        pytest.skip(f"only {len(jax.devices())} in-process device(s): jax "
+                    f"initialized before XLA_FLAGS could force 8")
+
+
+def _fresh(work_dir, *, bugs=frozenset(), zero1=False, fault=None,
+           **overrides):
+    import dataclasses as dc
+
+    import jax
+    from repro.configs.base import get_config
+    from repro.models.model import Model
+    from repro.optim.adamw import AdamW
+    from repro.parallel.api import ParallelConfig
+    from repro.supervise import Supervisor, SuperviseConfig
+    cfg = dc.replace(get_config("tinyllama-1.1b").reduced(),
+                     tie_embeddings=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    kw = dict(steps=8, check_every=1, async_window=2, ckpt_every=2,
+              work_dir=str(work_dir), seed=0)
+    kw.update(overrides)
+    pcfg = ParallelConfig(dp=2, tp=2, zero1=zero1, bugs=frozenset(bugs))
+    return Supervisor(model, cfg, pcfg, AdamW(lr=1e-3), params=params,
+                      scfg=SuperviseConfig(**kw), batch_size=4, seq_len=32,
+                      fault=fault)
+
+
+def _record_sets(res):
+    return {k: None if rep is None
+            else [(r.kind, r.name, r.rel_err, r.flagged)
+                  for r in rep.records]
+            for k, rep in res.checks.items()}
+
+
+_BASELINE = {}
+
+
+def _baseline(tmp_path_factory):
+    if "res" not in _BASELINE:
+        wd = tmp_path_factory.mktemp("baseline")
+        sup = _fresh(wd, reestimate_every=3, stop_on_flag=False)
+        _BASELINE["res"] = sup.run()
+    return _BASELINE["res"]
+
+
+@pytest.mark.slow
+@settings(max_examples=2, deadline=None)
+@given(crash_step=st.integers(min_value=2, max_value=6))
+def test_crash_resume_converges_with_uninterrupted(tmp_path_factory,
+                                                   crash_step):
+    """SIGKILL-equivalent abort at a property-chosen step, then resume:
+    the resumed run must converge to the uninterrupted run's verdicts —
+    same checked steps, bit-equal rel-errs, same threshold epochs."""
+    _require_devices()
+    base = _baseline(tmp_path_factory)
+    wd = tmp_path_factory.mktemp(f"crash{crash_step}")
+    sup = _fresh(wd, reestimate_every=3, stop_on_flag=False,
+                 fault=make_injector("crash", crash_step,
+                                     crash_handler=_boom))
+    with pytest.raises(Boom):
+        sup.run()
+    res = _fresh(wd, reestimate_every=3, stop_on_flag=False).resume()
+    assert res.resumed_from is not None and res.resumed_from <= crash_step
+    assert res.steps_run == base.steps_run
+    assert set(res.checks) == set(base.checks)
+    assert _record_sets(res) == _record_sets(base)
+    assert res.reestimations == base.reestimations
+    assert res.flagged == base.flagged
+
+
+@pytest.mark.slow
+def test_resume_refuses_drifted_config_end_to_end(tmp_path):
+    _require_devices()
+    j = Journal(journal_path(str(tmp_path)))
+    cfg = {"steps": 8, "check_every": 1, "async_window": 2, "ckpt_every": 2,
+           "reestimate_every": 0, "seed": 0, "drift_alpha": 0.125}
+    j.append("start", **dict(cfg, check_every=2))
+    j.close()
+    with pytest.raises(ValueError, match="drifted config"):
+        _fresh(tmp_path).resume()
+
+
+@pytest.mark.slow
+def test_flagged_run_resumes_to_same_first_bad_step(tmp_path_factory):
+    """A buggy run killed mid-flight must resume to the same verdict:
+    flagged, same first online flag, same bisected first-bad-step, same
+    localized module."""
+    _require_devices()
+    kw = dict(bugs={"zero_skipped_update"}, zero1=True, steps=8)
+    wd0 = tmp_path_factory.mktemp("flag-base")
+    base = _fresh(wd0, **kw).run()
+    assert base.flagged and base.localized_module == "optimizer"
+
+    wd = tmp_path_factory.mktemp("flag-crash")
+    sup = _fresh(wd, fault=make_injector("crash", 2, crash_handler=_boom),
+                 **kw)
+    try:
+        sup.run()
+    except Boom:
+        pass        # stop_on_flag may resolve the flag before step 2 fires
+    res = _fresh(wd, **kw).resume()
+    assert res.flagged
+    assert res.first_flagged_step == base.first_flagged_step
+    assert res.first_bad_step == base.first_bad_step
+    assert res.localized_module == base.localized_module
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("fault_id", sorted(FAULTS))
+def test_every_fault_is_injected_detected_and_recovered(fault_id,
+                                                        tmp_path):
+    """The fault matrix: each registered fault fires inside a real
+    supervised run and the run shows the registry's promised recovery."""
+    _require_devices()
+    wd = str(tmp_path)
+
+    if fault_id == "crash":
+        sup = _fresh(wd, steps=6, fault=make_injector(
+            "crash", 3, crash_handler=_boom))
+        with pytest.raises(Boom):
+            sup.run()
+        assert sup.fault.fired == 1
+        assert any(e["t"] == "start"
+                   for e in Journal.read(journal_path(wd)))
+        res = _fresh(wd, steps=6).resume()
+        assert res.steps_run == 6 and res.passed
+        assert res.resumed_from is not None
+
+    elif fault_id == "hang_check":
+        sup = _fresh(wd, steps=8, stop_on_flag=False,
+                     watchdog_timeout_s=0.3, watchdog_retries=0,
+                     degrade_after=2,
+                     fault=make_injector("hang_check", 2))
+        res = sup.run()
+        assert res.steps_run == 8          # training never stalled
+        assert res.checks_rescued > 0      # sync fallback from the ring
+        assert res.degradations            # saturation degraded to sampling
+        assert res.degraded_check_every and res.degraded_check_every > 1
+        assert res.passed
+
+    elif fault_id == "nan_step":
+        sup = _fresh(wd, steps=6, fault=make_injector("nan_step", 2))
+        res = sup.run()
+        assert 2 in res.loud_steps         # LOUD, not a threshold question
+        assert res.flagged and res.first_bad_step == 2
+        assert "LOUD" in res.summary()
+
+    elif fault_id == "corrupt_spill":
+        sup = _fresh(wd, steps=8, stop_on_flag=False,
+                     fault=make_injector("corrupt_spill", 1))
+        res = sup.run()
+        assert res.steps_run == 8
+        with pytest.raises(KeyError, match="corrupt"):
+            sup.ring.get(1)
+        assert sup.ring.corrupt_count == 1
+
+    elif fault_id == "truncate_ckpt":
+        sup = _fresh(wd, steps=6, stop_on_flag=False,
+                     fault=make_injector("truncate_ckpt", 2))
+        res = sup.run()
+        assert res.steps_run == 6
+        assert sup.keeper.verify(0) and not sup.keeper.verify(2)
+        # the bisection probe answers "diverged" for the rotted
+        # checkpoint and discards it: the search retreats, never builds
+        # a verdict on corrupt state
+        assert sup._params_diverged(2) is True
+        assert 2 not in sup.keeper.steps
+        assert any("corrupt checkpoint" in e.detail
+                   for e in sup.watchdog.events)
+
+    elif fault_id == "dead_spill_writer":
+        sup = _fresh(wd, steps=8, stop_on_flag=False,
+                     fault=make_injector("dead_spill_writer", 1))
+        res = sup.run()
+        assert res.steps_run == 8          # spill death never stops training
+        assert any("spill writer" in e for e in res.watchdog_events)
+        assert sup.ring.drop_count >= 1    # the poisoned write was dropped
+        assert sup.ring.spill_count >= 1   # the restarted worker kept going
+
+    else:                                   # a new fault without a test
+        pytest.fail(f"no matrix case for registered fault {fault_id!r}")
+
+
+@pytest.mark.slow
+def test_truncated_ckpt_replay_falls_back_to_earlier_checkpoint(tmp_path):
+    _require_devices()
+    sup = _fresh(str(tmp_path), steps=6, stop_on_flag=False,
+                 fault=make_injector("truncate_ckpt", 4))
+    res = sup.run()
+    assert res.steps_run == 6 and not sup.keeper.verify(4)
+    n_events = len(sup.watchdog.events)
+    # replay anchored at the rotted checkpoint: retreats to an earlier
+    # durable one instead of restoring garbage; the clean run stays clean
+    assert sup._replay(4, 5) is None
+    assert 4 not in sup.keeper.steps
+    assert any("corrupt checkpoint at replay" in e.detail
+               for e in sup.watchdog.events[n_events:])
+
+
+@pytest.mark.slow
+def test_cli_sigkill_then_resume(tmp_path):
+    """The real thing: a true SIGKILL through the CLI fault harness, then
+    ``--resume`` completes the run from the journal."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    wd = str(tmp_path / "run")
+    common = [sys.executable, "-m", "repro.launch.supervise", "--reduced",
+              "--steps", "6", "--ckpt-every", "2", "--work-dir", wd]
+    out = subprocess.run(common + ["--fault", "crash", "--fault-step", "4"],
+                         capture_output=True, text=True, timeout=2400,
+                         env=env, cwd=ROOT)
+    assert out.returncode == -signal.SIGKILL, out.stdout + out.stderr
+    assert os.path.exists(journal_path(wd))
+    out2 = subprocess.run(common + ["--resume"], capture_output=True,
+                          text=True, timeout=2400, env=env, cwd=ROOT)
+    assert out2.returncode == 0, out2.stdout + "\n" + out2.stderr
+    assert "resumed from journaled checkpoint" in out2.stdout
+    assert "PASS" in out2.stdout
